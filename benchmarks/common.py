@@ -1,0 +1,44 @@
+"""Shared helpers for the benchmark suite.
+
+Canonical reproduction settings: 8000 requests/workload, seed 7 — the
+calibration frozen in EXPERIMENTS.md. Every benchmark prints
+``name,us_per_call,derived`` CSV rows (one per paper table/figure entry).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import numpy as np
+
+N_REQUESTS = 8000
+SEED = 7
+
+
+def timed(fn: Callable, *args, **kwargs):
+    t0 = time.perf_counter()
+    out = fn(*args, **kwargs)
+    return out, (time.perf_counter() - t0) * 1e6
+
+
+def emit(name: str, us: float, derived) -> str:
+    row = f"{name},{us:.1f},{derived}"
+    print(row)
+    return row
+
+
+def suite_traces(n: int = N_REQUESTS, seed: int = SEED):
+    from repro.core.dram import PAPER_WORKLOADS, generate_trace
+    return [generate_trace(p, n, seed=seed) for p in PAPER_WORKLOADS]
+
+
+def suite_ipc(traces, policy):
+    """Per-workload IPC under one policy (vectorized across the suite)."""
+    from repro.core.dram import PAPER_WORKLOADS, simulate_batch
+    from repro.core.dram.timing import DEFAULT_CORE
+    res = simulate_batch(traces, policy)
+    total = np.asarray(res.total_cycles, np.float64)
+    nreq = np.asarray(res.n_requests, np.float64)
+    mpki = np.array([p.mpki for p in PAPER_WORKLOADS])
+    instr = nreq * 1000.0 / mpki
+    return instr / (total * DEFAULT_CORE.cpu_per_dram), res

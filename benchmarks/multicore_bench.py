@@ -1,0 +1,62 @@
+"""Paper multi-core results (Sec. 4: +15/16/20% weighted speedup) and the
+composition with application-aware (TCM-style) scheduling (Sec. 9.3)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import SEED, emit, timed
+from repro.core.dram import PAPER_WORKLOADS, Policy, generate_trace
+from repro.core.dram.multicore import simulate_multicore
+
+N = 1500
+# Four 4-core mixes spanning intensity classes (paper-style random mixes).
+MIXES = (
+    ("mcf", "lbm", "soplex", "sphinx3"),
+    ("gups", "milc", "omnetpp", "xalancbmk"),
+    ("stream_copy", "GemsFDTD", "leslie3d", "gcc"),
+    ("libquantum", "zeusmp", "bwaves", "astar"),
+)
+_BY_NAME = {p.name: p for p in PAPER_WORKLOADS}
+
+
+def _mix_traces(names):
+    return [generate_trace(_BY_NAME[n], N, seed=SEED, row_space_offset=4096 * i)
+            for i, n in enumerate(names)]
+
+
+def run() -> dict:
+    gains = {pol: [] for pol in (Policy.SALP1, Policy.SALP2, Policy.MASA, Policy.IDEAL)}
+    tcm_gain, tcm_base_gain = [], []
+    for mix in MIXES:
+        traces = _mix_traces(mix)
+        (base, us) = timed(simulate_multicore, traces, Policy.BASELINE)
+        ws0 = base.weighted_speedup
+        row = []
+        for pol in gains:
+            ws = simulate_multicore(traces, pol).weighted_speedup
+            g = 100 * (ws / ws0 - 1)
+            gains[pol].append(g)
+            row.append(f"{pol.pretty}=+{g:.1f}%")
+        # scheduler composition
+        ws_tcm_masa = simulate_multicore(traces, Policy.MASA, use_ranking=True).weighted_speedup
+        ws_tcm_base = simulate_multicore(traces, Policy.BASELINE, use_ranking=True).weighted_speedup
+        tcm_gain.append(100 * (ws_tcm_masa / ws0 - 1))
+        tcm_base_gain.append(100 * (ws_tcm_base / ws0 - 1))
+        emit(f"multicore.{'+'.join(mix)}", us, ";".join(row))
+
+    out = {}
+    paper = {Policy.SALP1: 15.0, Policy.SALP2: 16.0, Policy.MASA: 20.0}
+    for pol, g in gains.items():
+        m = float(np.mean(g))
+        out[pol.pretty] = m
+        ref = f"(paper={paper[pol]}%)" if pol in paper else ""
+        emit(f"multicore.MEAN.{pol.pretty}", 0.0, f"+{m:.1f}%{ref}")
+    out["masa_tcm"] = float(np.mean(tcm_gain))
+    out["base_tcm"] = float(np.mean(tcm_base_gain))
+    emit("multicore.MEAN.MASA+TCM", 0.0,
+         f"+{out['masa_tcm']:.1f}%vs_base_tcm=+{out['base_tcm']:.1f}%(composes)")
+    return out
+
+
+if __name__ == "__main__":
+    run()

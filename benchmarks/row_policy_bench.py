@@ -1,0 +1,42 @@
+"""Paper Sec. 9.3 sensitivity: open- vs closed-row policy.
+
+Under the closed-row policy every access auto-precharges, so (a) there are no
+row-buffer hits for MASA's multiple row buffers to win, and (b) the auto-PRE
+occupies the bank's global structures, which SALP-1/2 can still overlap.
+Expected (and measured): SALP-1/2 retain roughly half their open-row gains;
+MASA degenerates to exactly SALP-2.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import SEED, emit, timed
+from repro.core.dram import PAPER_WORKLOADS, Policy, SimConfig, generate_trace, simulate_batch
+
+N = 4000
+SUBSET = [p for p in PAPER_WORKLOADS if p.mpki >= 9.0]
+
+
+def run() -> dict:
+    traces = [generate_trace(p, N, seed=SEED) for p in SUBSET]
+    out = {}
+    for rp in ("open", "closed"):
+        cfg = SimConfig(row_policy=rp)
+        (res_b, us) = timed(simulate_batch, traces, Policy.BASELINE, cfg)
+        base = np.asarray(res_b.total_cycles, np.float64)
+        gains = {}
+        for pol in (Policy.SALP1, Policy.SALP2, Policy.MASA):
+            cyc = np.asarray(simulate_batch(traces, pol, cfg).total_cycles,
+                             np.float64)
+            gains[pol.pretty] = float((base / cyc - 1).mean() * 100)
+        out[rp] = gains
+        emit(f"row_policy.{rp}", us / len(SUBSET),
+             ";".join(f"{k}=+{v:.1f}%" for k, v in gains.items()))
+    masa_eq_salp2 = abs(out["closed"]["MASA"] - out["closed"]["SALP-2"]) < 0.5
+    emit("row_policy.closed_masa_equals_salp2", 0.0,
+         f"{masa_eq_salp2}(multiple_row_buffers_need_open_rows)")
+    return out
+
+
+if __name__ == "__main__":
+    run()

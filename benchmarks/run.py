@@ -1,0 +1,58 @@
+"""Benchmark orchestrator. One module per paper table/figure.
+
+Usage:  PYTHONPATH=src python -m benchmarks.run [--only fig4,fig5,...]
+
+Prints ``name,us_per_call,derived`` CSV rows (see each module), then a summary
+block comparing headline numbers against the paper's claims.
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import time
+
+MODULES = [
+    ("fig4", "benchmarks.fig4_ipc"),           # Figure 4: IPC vs mechanism
+    ("fig5", "benchmarks.fig5_energy"),        # Figure 5: dynamic energy + row-hit
+    ("sens_subarrays", "benchmarks.sens_subarrays"),  # Sec. 9.2 sensitivity
+    ("multicore", "benchmarks.multicore_bench"),      # Sec. 4 / 9.3 multicore + TCM
+    ("kernels", "benchmarks.kernel_bench"),    # Layer B: Pallas kernel residency
+    ("serving", "benchmarks.serving_bench"),   # Layer C: SALP-aware scheduler
+    ("refresh", "benchmarks.refresh_bench"),   # Sec. 6.1 extension: DSARP
+    ("sens_banks", "benchmarks.sens_banks"),   # Sec. 1/9.2: banks-vs-subarrays cost
+    ("row_policy", "benchmarks.row_policy_bench"),  # Sec. 9.3: open vs closed row
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", type=str, default=None,
+                    help="comma-separated subset of: " + ",".join(k for k, _ in MODULES))
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    print("name,us_per_call,derived")
+    summaries = {}
+    for key, modname in MODULES:
+        if only and key not in only:
+            continue
+        try:
+            mod = importlib.import_module(modname)
+        except ModuleNotFoundError as e:
+            print(f"{key}.SKIPPED,0.0,module_missing:{e.name}")
+            continue
+        t0 = time.perf_counter()
+        try:
+            summaries[key] = mod.run()
+        except Exception as e:  # a failing bench must not hide the others
+            print(f"{key}.FAILED,0.0,{type(e).__name__}:{e}")
+            continue
+        print(f"{key}.TOTAL,{(time.perf_counter()-t0)*1e6:.0f},ok")
+
+    print("\n# ---- summary vs paper ----")
+    for key, summary in summaries.items():
+        print(f"# {key}: {summary}")
+
+
+if __name__ == "__main__":
+    main()

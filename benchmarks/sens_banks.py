@@ -1,0 +1,58 @@
+"""Paper Sec. 9.2 / Sec. 1: the cost argument.
+
+"A naive solution to bank conflicts is to increase the number of banks ...
+at significantly high cost." This benchmark quantifies the trade the paper
+leads with: MASA on 8 banks x 8 subarrays (<0.15% die overhead) vs a
+subarray-oblivious baseline given 8/16/32/64 REAL banks (expensive).
+
+Traces are regenerated per bank count (the address space spreads across
+whatever banks exist); IPC gains are vs the 8-bank baseline.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import SEED, emit, timed
+from repro.core.dram import PAPER_WORKLOADS, Policy, SimConfig, generate_trace, simulate_batch
+
+N = 4000
+SUBSET = [p for p in PAPER_WORKLOADS if p.mpki >= 9.0]
+
+
+def _mean_cycles(traces, policy, cfg):
+    res = simulate_batch(traces, policy, cfg)
+    return np.asarray(res.total_cycles, np.float64)
+
+
+def run() -> dict:
+    # reference: 8-bank subarray-oblivious baseline
+    t8 = [generate_trace(p, N, n_banks=8, seed=SEED) for p in SUBSET]
+    base8 = _mean_cycles(t8, Policy.BASELINE, SimConfig(n_banks=8))
+
+    out = {}
+    for nb in (8, 16, 32, 64):
+        tn = [generate_trace(p, N, n_banks=nb, seed=SEED) for p in SUBSET]
+        (cyc, us) = timed(_mean_cycles, tn, Policy.BASELINE, SimConfig(n_banks=nb))
+        g = float((base8 / cyc - 1).mean() * 100)
+        out[f"baseline_{nb}banks"] = g
+        emit(f"sens_banks.baseline_{nb}banks", us / len(SUBSET), f"+{g:.1f}%")
+
+    masa = _mean_cycles(t8, Policy.MASA, SimConfig(n_banks=8))
+    g_masa = float((base8 / masa - 1).mean() * 100)
+    out["masa_8banks_8subarrays"] = g_masa
+    emit("sens_banks.MASA_8banksx8subarrays", 0.0,
+         f"+{g_masa:.1f}%(free_vs_the_{_closest(out, g_masa)}-bank_cost)")
+    return out
+
+
+def _closest(out: dict, g: float) -> int:
+    best, bn = None, 8
+    for nb in (8, 16, 32, 64):
+        d = abs(out[f"baseline_{nb}banks"] - g)
+        if best is None or d < best:
+            best, bn = d, nb
+    return bn
+
+
+if __name__ == "__main__":
+    run()

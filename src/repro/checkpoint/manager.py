@@ -1,0 +1,66 @@
+"""Checkpoint manager: async saves off the critical path, keep-K retention,
+resume-from-latest."""
+from __future__ import annotations
+
+import pathlib
+import shutil
+import threading
+from typing import Any
+
+import jax
+
+from repro.checkpoint.store import latest_step, load_checkpoint, save_checkpoint
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, *, keep: int = 3, async_save: bool = True,
+                 host_index: int = 0):
+        self.directory = pathlib.Path(directory)
+        self.keep = keep
+        self.async_save = async_save
+        self.host_index = host_index
+        self._thread: threading.Thread | None = None
+        self._last_error: Exception | None = None
+
+    # ------------------------------------------------------------- save
+    def save(self, step: int, tree: Any, *, pspecs: Any = None,
+             extra_meta: dict | None = None, block: bool = False) -> None:
+        # snapshot to host memory synchronously (cheap), write async
+        host_tree = jax.tree.map(lambda x: jax.device_get(x), tree)
+
+        def _write():
+            try:
+                save_checkpoint(self.directory, step, host_tree, pspecs=pspecs,
+                                host_index=self.host_index, extra_meta=extra_meta)
+                self._gc()
+            except Exception as e:  # noqa: BLE001 — surfaced on next wait()
+                self._last_error = e
+
+        self.wait()
+        if self.async_save and not block:
+            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread.start()
+        else:
+            _write()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._last_error is not None:
+            err, self._last_error = self._last_error, None
+            raise err
+
+    def _gc(self) -> None:
+        steps = sorted(int(p.name.split("_")[1])
+                       for p in self.directory.glob("step_*")
+                       if not p.name.endswith(".tmp"))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(self.directory / f"step_{s:06d}", ignore_errors=True)
+
+    # ------------------------------------------------------------- restore
+    def latest_step(self) -> int | None:
+        return latest_step(self.directory)
+
+    def restore(self, template: Any, step: int | None = None):
+        return load_checkpoint(self.directory, step, template=template)

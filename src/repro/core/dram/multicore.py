@@ -1,0 +1,155 @@
+"""Multi-core shared-channel simulation (paper Sec. 4 / Sec. 9.3 of [66]).
+
+``n_cores`` request streams share one channel's banks. Each core issues its own
+requests in program order (same analytic OoO core as the single-core engine);
+the memory controller picks among the cores' head requests with FR-FCFS
+(row-hits first, then oldest), optionally composed with an application-aware
+thread ranking (TCM-style: latency-sensitive/low-MPKI cores prioritized), which
+is the scheduler combination the paper evaluates on top of SALP.
+
+Metrics: weighted speedup = sum_i IPC_shared(i) / IPC_alone(i).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dram.engine import SimConfig, SimResult, _state0, _step, _RING, simulate
+from repro.core.dram.policies import Policy
+from repro.core.dram.trace import Trace, WorkloadProfile, to_ideal, stack_traces
+from repro.core.dram.metrics import ipc_from_result
+
+_BIG = jnp.int32(1 << 28)
+
+
+@functools.partial(jax.jit, static_argnames=("policy", "n_banks", "n_subarrays", "timing", "use_ranking"))
+def _simulate_multicore(policy: int, n_banks: int, n_subarrays: int, timing,
+                        use_ranking: bool,
+                        bank, subarray, row, is_write, gap, dep,  # [C, N]
+                        mlp_window, rank):                        # [C]
+    C, N = bank.shape
+    dram0 = _state0(n_banks, n_subarrays)
+
+    state0 = dict(
+        dram=dram0,
+        ptr=jnp.zeros((C,), jnp.int32),
+        vis_prev=jnp.zeros((C,), jnp.int32),
+        comp_ring=jnp.zeros((C, _RING), jnp.int32),
+        core_max_comp=jnp.zeros((C,), jnp.int32),
+    )
+
+    cores = jnp.arange(C, dtype=jnp.int32)
+
+    def step(state, _):
+        ptr = state["ptr"]
+        live = ptr < N
+        p = jnp.minimum(ptr, N - 1)
+
+        hb = bank[cores, p]
+        hs = subarray[cores, p]
+        hw = row[cores, p]
+        hgap = gap[cores, p]
+        hdep = dep[cores, p]
+
+        # per-core visibility of its head request
+        comp_prev = state["comp_ring"][cores, (p - 1) % _RING]
+        rob_lim = jnp.where(p >= mlp_window,
+                            state["comp_ring"][cores, (p - mlp_window) % _RING], 0)
+        vis = jnp.maximum(state["vis_prev"] + hgap,
+                          jnp.maximum(jnp.where(hdep, comp_prev, 0), rob_lim))
+
+        # FR-FCFS (+ optional TCM rank) selection among live heads
+        hit = state["dram"]["open_row"][hb, hs] == hw
+        key = vis + jnp.where(hit, 0, _BIG)
+        if use_ranking:
+            # TCM-style: the latency-sensitive (low-MPKI) half of the cores is
+            # strictly prioritized over the bandwidth-sensitive half.
+            latency_sensitive = rank < (C // 2)
+            key = key - jnp.where(latency_sensitive, 2 * _BIG, 0)
+        key = jnp.where(live, key, jnp.int32(2_000_000_000))
+        c = jnp.argmin(key).astype(jnp.int32)
+
+        # Serve core c's head request through the single-channel DRAM model.
+        # vis already folds in gap / dep / ROB constraints, so neutralize those
+        # fields to avoid double counting inside _step.
+        req = dict(
+            bank=hb[c], subarray=hs[c], row=hw[c],
+            is_write=is_write[c, p[c]], gap=jnp.int32(0), dep=jnp.bool_(False),
+            idx=p[c], mlp_window=mlp_window[c],
+        )
+        dram = dict(state["dram"])
+        dram["vis_prev"] = vis[c]
+        dram["comp_ring"] = state["comp_ring"][c]
+        new_dram, _ = _step(policy, timing, 0, dram, req)
+
+        comp = new_dram["comp_ring"][p[c] % _RING]
+        new = dict(
+            dram=new_dram,
+            ptr=state["ptr"].at[c].add(1),
+            vis_prev=state["vis_prev"].at[c].set(vis[c]),
+            comp_ring=state["comp_ring"].at[c].set(new_dram["comp_ring"]),
+            core_max_comp=state["core_max_comp"].at[c].set(
+                jnp.maximum(state["core_max_comp"][c], comp)),
+        )
+        # the shared DRAM state must not carry one core's ring/vis into another's
+        new["dram"]["comp_ring"] = dram0["comp_ring"]
+        new["dram"]["vis_prev"] = jnp.int32(0)
+        return new, None
+
+    final, _ = jax.lax.scan(step, state0, None, length=C * N)
+    d = final["dram"]
+    res = SimResult(
+        total_cycles=jnp.maximum(d["max_comp"], jnp.max(final["vis_prev"])),
+        n_requests=jnp.int32(C * N),
+        n_act=d["c_act"], n_pre=d["c_pre"], n_rd=d["c_rd"], n_wr=d["c_wr"],
+        n_sasel=d["c_sasel"], n_hit=d["c_hit"],
+        sum_latency=d["sum_lat"], n_reads=d["c_reads"],
+        sa_open_cycles=d["sa_open_cycles"],
+    )
+    return res, final["core_max_comp"]
+
+
+@dataclasses.dataclass
+class MulticoreResult:
+    shared: SimResult
+    core_cycles: np.ndarray          # per-core completion of its own stream
+    alone_cycles: np.ndarray         # per-core cycles when run ALONE on the BASELINE
+    profiles: list[WorkloadProfile]
+
+    @property
+    def weighted_speedup(self) -> float:
+        """Sum_i IPC_shared,i / IPC_alone-baseline,i.
+
+        The alone reference is the *baseline* memory system for every policy, so
+        cross-policy WS ratios reflect the full mechanism benefit (the paper's
+        multi-core system-performance metric).
+        """
+        return float(np.sum(self.alone_cycles / np.maximum(self.core_cycles, 1)))
+
+
+def simulate_multicore(traces: list[Trace], policy: Policy,
+                       config: SimConfig = SimConfig(),
+                       use_ranking: bool = False) -> MulticoreResult:
+    nb, ns = config.geometry_for(policy)
+    eff = Policy.BASELINE if policy == Policy.IDEAL else policy
+    work = [to_ideal(t, config.n_banks, config.n_subarrays) if policy == Policy.IDEAL else t
+            for t in traces]
+    st = stack_traces(work)
+    # TCM-style ranking: lower MPKI -> higher priority (rank 0 first)
+    mpkis = np.array([t.profile.mpki for t in traces])
+    rank = np.argsort(np.argsort(mpkis)).astype(np.int32)
+    shared, core_cycles = _simulate_multicore(
+        int(eff), nb, ns, config.timing, use_ranking,
+        jnp.asarray(st["bank"]), jnp.asarray(st["subarray"]), jnp.asarray(st["row"]),
+        jnp.asarray(st["is_write"]), jnp.asarray(st["gap"]), jnp.asarray(st["dep"]),
+        jnp.asarray(st["mlp_window"]), jnp.asarray(rank))
+    alone = np.array([float(np.asarray(simulate(t, Policy.BASELINE, config).total_cycles))
+                      for t in traces])
+    return MulticoreResult(shared=shared,
+                           core_cycles=np.asarray(core_cycles, np.float64),
+                           alone_cycles=alone,
+                           profiles=[t.profile for t in traces])

@@ -1,0 +1,104 @@
+"""DRAM timing / energy / core-model constants.
+
+Units: DRAM command-clock cycles (DDR3-1066 => 533 MHz command clock,
+1 cycle = 1.876 ns, burst of 8 transfers occupies tBL = 4 command cycles).
+
+The values mirror a DDR3-1066 7-7-7 part, the device class used in the SALP
+paper's evaluation. ``t_rrd_sa`` is the paper's new constraint: minimum spacing
+between ACTIVATEs to *different subarrays of the same bank* (Section 5.1 of the
+ISCA'12 paper introduces a constraint of this kind to bound peak current);
+``t_sa`` is the SA_SEL command latency MASA adds before a column command when
+the designated subarray changes.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class DramTiming:
+    t_cl: int = 7      # column (CAS) latency, read
+    t_cwl: int = 6     # column write latency
+    t_rcd: int = 7     # ACT -> column command
+    t_rp: int = 7      # PRE -> ACT (same subarray / same bank for baseline)
+    t_ras: int = 20    # ACT -> PRE (minimum row-open time)
+    t_wr: int = 8      # write recovery: last write data -> PRE
+    t_rtp: int = 4     # read -> PRE
+    t_bl: int = 4      # burst length on the data bus (8 beats, DDR)
+    t_ccd: int = 4     # column -> column
+    t_wtr: int = 4     # write data end -> read command (bus turnaround)
+    t_rtw: int = 6     # read command -> write command (bus turnaround)
+    t_rrd: int = 4     # ACT -> ACT, different banks
+    t_rrd_sa: int = 4  # ACT -> ACT, different subarrays of the same bank (SALP)
+    t_faw: int = 20    # four-activate window
+    t_sa: int = 1      # SA_SEL latency (MASA designation before a column command)
+    t_refi: int = 4160  # refresh interval (7.8 us @ 533 MHz)
+    t_rfc: int = 160    # refresh cycle time (~300 ns, 8 Gb-class density)
+
+    @property
+    def t_rc(self) -> int:
+        return self.t_ras + self.t_rp
+
+
+#: DDR3-1066 7-7-7, the paper's device class.
+DDR3_1066 = DramTiming()
+
+
+@dataclasses.dataclass(frozen=True)
+class EnergyModel:
+    """Per-command dynamic energy (nJ) + static terms.
+
+    Magnitudes follow the Micron DDR3 power-calculator methodology the paper
+    uses: an ACT/PRE pair costs a couple of nJ and a column burst about one nJ.
+    ``p_sa_static_mw`` is the paper's measured 0.56 mW per *additional*
+    concurrently-activated subarray (MASA); ``p_background_mw`` is active-standby
+    background power per device, charged over the whole simulated interval so
+    that static energy is policy-comparable.
+    """
+    e_act: float = 1.60    # nJ per ACTIVATE
+    e_pre: float = 0.80    # nJ per PRECHARGE
+    e_rd: float = 1.10     # nJ per read burst (incl. IO)
+    e_wr: float = 1.25     # nJ per write burst (incl. IO + ODT)
+    e_sasel: float = 0.05  # nJ per SA_SEL (single-bit latch toggle + cmd decode)
+    p_sa_static_mw: float = 0.56   # per extra activated subarray (paper, Sec. 2.3)
+    p_background_mw: float = 95.0  # active standby background
+    cycle_ns: float = 1.876        # DDR3-1066 command-clock period
+
+    def static_nj(self, cycles: float, extra_sa_cycles: float) -> float:
+        bg = self.p_background_mw * 1e-3 * cycles * self.cycle_ns  # mW * ns = pJ... see note
+        sa = self.p_sa_static_mw * 1e-3 * extra_sa_cycles * self.cycle_ns
+        # mW * ns = 1e-3 J/s * 1e-9 s = 1e-12 J = pJ; convert pJ -> nJ
+        return (bg + sa) * 1e-3
+
+
+DEFAULT_ENERGY = EnergyModel()
+
+
+@dataclasses.dataclass(frozen=True)
+class CoreModel:
+    """Analytic out-of-order core used to pace the request stream.
+
+    The paper evaluates with a 3-wide out-of-order core, 128-entry ROB, CPU
+    clock ~6x the DRAM command clock. Requests are issued in program order
+    (single stream) with:
+      * a compute gap between consecutive misses drawn from the workload MPKI,
+      * dependent loads serializing on the previous load's completion,
+      * a ROB-occupancy constraint: request ``i`` cannot issue before request
+        ``i - mlp_window`` has completed (bounded memory-level parallelism).
+    """
+    ipc_peak: float = 3.0          # retire width
+    rob: int = 128                 # ROB entries
+    cpu_per_dram: float = 6.0      # CPU cycles per DRAM command cycle
+    mshr: int = 32                 # max outstanding misses
+
+    @property
+    def instr_per_dram_cycle(self) -> float:
+        return self.ipc_peak * self.cpu_per_dram
+
+    def mlp_window(self, mpki: float) -> int:
+        """Outstanding misses allowed by a full ROB at this miss density."""
+        w = int(round(self.rob * mpki / 1000.0))
+        return max(1, min(self.mshr, w))
+
+
+DEFAULT_CORE = CoreModel()

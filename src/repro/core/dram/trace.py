@@ -1,0 +1,238 @@
+"""Workload -> memory-request trace generation.
+
+Traces are generated on the host with numpy (deterministic per seed) and fed to
+the JAX simulator as arrays. A workload is a small Markov process over a set of
+concurrently-live access streams, parameterized to match the *published
+characteristics* of the paper's 32-application suite (SPEC CPU2006 + STREAM +
+GUPS + TPC classes): misses-per-kilo-instruction (MPKI), write fraction
+(=> WMPKI), row-buffer run length, number of concurrent streams (=> bank
+conflict pressure), pointer-chasing dependence fraction, and streaming-ness.
+
+The *baseline* is calibrated against these published characteristics; the
+mechanisms' gains are then emergent from the timing model — they are never fit.
+"""
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.dram.timing import CoreModel, DEFAULT_CORE
+
+# Golden-ratio hash so that rows spread uniformly over subarrays, independent
+# of stride patterns (the paper assumes rows hash across subarrays; two hot
+# rows land in the same subarray w.p. 1/n_subarrays).
+_HASH_MULT = 2654435761
+
+
+def _row_to_subarray(row: np.ndarray, n_subarrays: int) -> np.ndarray:
+    return ((row.astype(np.uint64) * _HASH_MULT) >> np.uint64(11)).astype(np.int64) % n_subarrays
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadProfile:
+    """Knobs describing one application's memory behaviour."""
+    name: str
+    mpki: float            # last-level-cache misses per kilo-instruction
+    wr_frac: float         # fraction of requests that are writes (WMPKI = mpki * wr_frac)
+    row_run: float         # mean consecutive same-row accesses within a stream
+    n_streams: int         # concurrently-live access streams (bank-conflict pressure)
+    rows_per_stream: int   # hot-row working set per stream (row reuse => MASA hits)
+    dep_frac: float        # fraction of loads dependent on the previous load
+    seq_frac: float        # P(row switch is sequential next-row) vs jump-to-hot-row
+    cold_frac: float = 0.02  # P(completely random cold access)
+    align: float = 0.0     # fraction of hot rows sharing a common bank phase
+                           # (lockstep multi-array stride patterns => persistent
+                           # same-bank, cross-subarray conflicts)
+
+    @property
+    def wmpki(self) -> float:
+        return self.mpki * self.wr_frac
+
+
+#: The 32-workload suite. MPKI ordering mirrors the paper's Figure 4 x-axis
+#: (sorted by memory intensity); the three most write-intensive entries
+#: (lbm / stream_copy / gups: WMPKI > 15, MPKI > 25) are the paper's SALP-2
+#: standouts; mcf/omnetpp/gups are the dependence-heavy pointer chasers.
+PAPER_WORKLOADS: tuple[WorkloadProfile, ...] = (
+    WorkloadProfile("gamess",       0.4, 0.20,  8.0, 2,  4, 0.10, 0.50),
+    WorkloadProfile("povray",       0.5, 0.20,  8.0, 2,  4, 0.15, 0.30),
+    WorkloadProfile("namd",         0.7, 0.25,  6.0, 2,  6, 0.10, 0.40),
+    WorkloadProfile("calculix",     0.8, 0.30,  8.0, 2,  4, 0.10, 0.50),
+    WorkloadProfile("perlbench",    1.0, 0.25,  6.0, 3,  6, 0.20, 0.30),
+    WorkloadProfile("h264ref",      1.2, 0.30, 10.0, 2,  4, 0.10, 0.60),
+    WorkloadProfile("gobmk",        1.4, 0.25,  5.0, 3,  8, 0.25, 0.20),
+    WorkloadProfile("sjeng",        1.5, 0.20,  4.0, 3,  8, 0.30, 0.20),
+    WorkloadProfile("tonto",        1.6, 0.30,  6.0, 2,  6, 0.10, 0.40),
+    WorkloadProfile("gromacs",      2.0, 0.30,  8.0, 2,  4, 0.10, 0.50),
+    WorkloadProfile("gcc",          2.5, 0.30,  5.0, 3,  8, 0.20, 0.30),
+    WorkloadProfile("astar",        3.5, 0.25,  4.0, 2,  8, 0.45, 0.10),
+    WorkloadProfile("hmmer",        4.0, 0.35, 12.0, 2,  3, 0.05, 0.70, align=0.3),
+    WorkloadProfile("bzip2",        4.5, 0.30,  8.0, 3,  6, 0.15, 0.40),
+    WorkloadProfile("dealII",       5.0, 0.30,  6.0, 3,  6, 0.15, 0.40),
+    WorkloadProfile("cactusADM",    6.0, 0.35, 10.0, 3,  4, 0.10, 0.60, align=0.3),
+    WorkloadProfile("xalancbmk",    7.5, 0.25,  4.0, 4,  8, 0.30, 0.15),
+    WorkloadProfile("zeusmp",       9.0, 0.35,  8.0, 4,  4, 0.10, 0.50, align=0.3),
+    WorkloadProfile("wrf",         10.0, 0.35, 10.0, 3,  4, 0.08, 0.60, align=0.3),
+    WorkloadProfile("sphinx3",     12.0, 0.15,  6.0, 4,  6, 0.15, 0.40),
+    WorkloadProfile("bwaves",      15.0, 0.30, 12.0, 4,  3, 0.05, 0.80, align=0.35),
+    WorkloadProfile("leslie3d",    16.0, 0.35, 10.0, 4,  4, 0.05, 0.70, align=0.45),
+    WorkloadProfile("omnetpp",     17.0, 0.20,  3.0, 4, 10, 0.40, 0.10),
+    WorkloadProfile("soplex",      20.0, 0.25,  6.0, 4,  6, 0.15, 0.40),
+    WorkloadProfile("GemsFDTD",    22.0, 0.40, 10.0, 4,  4, 0.05, 0.70, align=0.5),
+    WorkloadProfile("libquantum",  25.0, 0.25, 16.0, 2,  2, 0.05, 0.90, align=0.5),
+    WorkloadProfile("milc",        26.0, 0.45,  6.0, 4,  6, 0.10, 0.40, align=0.6),
+    WorkloadProfile("lbm",         30.0, 0.55,  8.0, 4,  4, 0.05, 0.60, align=0.7),
+    WorkloadProfile("mcf",         33.0, 0.20,  3.0, 5, 12, 0.50, 0.05),
+    WorkloadProfile("stream_copy", 38.0, 0.50, 16.0, 3,  2, 0.02, 0.95, align=0.65),
+    WorkloadProfile("stream_triad",40.0, 0.35, 16.0, 4,  2, 0.02, 0.95, align=0.55),
+    WorkloadProfile("gups",        45.0, 0.50,  1.0, 6, 64, 0.60, 0.00),
+)
+
+
+@dataclasses.dataclass
+class Trace:
+    """Arrays of length ``n`` describing one request stream (trace order)."""
+    bank: np.ndarray       # int32 [n]
+    subarray: np.ndarray   # int32 [n]
+    row: np.ndarray        # int32 [n]  (row id within the subarray's address space)
+    is_write: np.ndarray   # bool  [n]
+    gap: np.ndarray        # int32 [n]  compute cycles before this request (DRAM cycles)
+    dep: np.ndarray        # bool  [n]  depends on previous request's completion
+    mlp_window: int        # ROB-limited outstanding misses for this workload
+    profile: WorkloadProfile | None = None
+
+    def __len__(self) -> int:
+        return int(self.bank.shape[0])
+
+
+def generate_trace(
+    profile: WorkloadProfile,
+    n_requests: int,
+    n_banks: int = 8,
+    n_subarrays: int = 8,
+    rows_per_bank: int = 32768,
+    core: CoreModel = DEFAULT_CORE,
+    seed: int = 0,
+    row_space_offset: int = 0,
+) -> Trace:
+    """Generate one workload trace.
+
+    ``row_space_offset`` shifts the hot-row address space (used to give each
+    core of a multi-core mix its own rows while sharing banks).
+    """
+    rng = np.random.default_rng(
+        np.random.SeedSequence([seed, zlib.crc32(profile.name.encode())]))
+    k = profile.n_streams
+
+    # Hot working set: per stream, a set of (bank, row) pairs. Streams landing
+    # in the same bank create the cross-subarray conflicts SALP targets.
+    # Lockstep multi-array iteration (lbm/STREAM/milc...): arrays share page
+    # alignment, so corresponding elements of different arrays land in the SAME
+    # bank but different rows => persistent same-bank cross-subarray conflicts.
+    # ``align`` controls what fraction of the hot set collides this way.
+    hot_bank = rng.integers(0, n_banks, size=(k, profile.rows_per_stream))
+    if profile.align > 0:
+        shared_bank = rng.integers(0, n_banks, size=profile.rows_per_stream)
+        collide = rng.random((k, profile.rows_per_stream)) < profile.align
+        hot_bank = np.where(collide, shared_bank[None, :], hot_bank)
+    hot_row = (rng.integers(0, rows_per_bank, size=(k, profile.rows_per_stream))
+               + row_space_offset) % rows_per_bank
+
+    # Current position per stream (index into its hot set) + sequential cursor.
+    cur = rng.integers(0, profile.rows_per_stream, size=k)
+    seq_row = rng.integers(0, rows_per_bank, size=k)
+    seq_bank = rng.integers(0, n_banks, size=k)
+    in_seq = np.zeros(k, dtype=bool)
+
+    stream_pick = rng.integers(0, k, size=n_requests)
+    switch_draw = rng.random(n_requests)
+    seq_draw = rng.random(n_requests)
+    cold_draw = rng.random(n_requests)
+    hot_jump = rng.integers(0, profile.rows_per_stream, size=n_requests)
+    cold_bank = rng.integers(0, n_banks, size=n_requests)
+    cold_row = rng.integers(0, rows_per_bank, size=n_requests)
+
+    p_switch = 1.0 / max(profile.row_run, 1.0)
+
+    bank = np.zeros(n_requests, dtype=np.int64)
+    row = np.zeros(n_requests, dtype=np.int64)
+
+    for i in range(n_requests):
+        s = stream_pick[i]
+        if cold_draw[i] < profile.cold_frac:
+            # Cold random access (TLB-miss-like noise).
+            bank[i] = cold_bank[i]
+            row[i] = (cold_row[i] + row_space_offset) % rows_per_bank
+            continue
+        if switch_draw[i] < p_switch:
+            if seq_draw[i] < profile.seq_frac:
+                # Sequential advance: next row, rotating through banks the way a
+                # row-interleaved mapping spreads a linear stream.
+                if not in_seq[s]:
+                    in_seq[s] = True
+                    seq_row[s] = hot_row[s, cur[s]]
+                    seq_bank[s] = hot_bank[s, cur[s]]
+                seq_row[s] = (seq_row[s] + 1) % rows_per_bank
+                if seq_draw[i] > profile.align * profile.seq_frac:
+                    # row-interleaved mapping: a linear stream rotates banks;
+                    # aligned strided arrays stay in-bank (conflict persists)
+                    seq_bank[s] = (seq_bank[s] + 1) % n_banks
+            else:
+                in_seq[s] = False
+                cur[s] = hot_jump[i]
+        if in_seq[s]:
+            bank[i] = seq_bank[s]
+            row[i] = seq_row[s]
+        else:
+            bank[i] = hot_bank[s, cur[s]]
+            row[i] = hot_row[s, cur[s]]
+
+    subarray = _row_to_subarray(row, n_subarrays)
+
+    is_write = rng.random(n_requests) < profile.wr_frac
+    dep = (rng.random(n_requests) < profile.dep_frac) & ~is_write
+    dep[0] = False
+
+    # Compute gap between misses: (1000/MPKI) instructions at peak retire rate.
+    mean_gap = (1000.0 / profile.mpki) / core.instr_per_dram_cycle
+    gap = rng.exponential(mean_gap, size=n_requests)
+    gap = np.maximum(0, np.round(gap)).astype(np.int64)
+    gap[0] = 0
+
+    return Trace(
+        bank=bank.astype(np.int32),
+        subarray=subarray.astype(np.int32),
+        row=row.astype(np.int32),
+        is_write=is_write,
+        gap=gap.astype(np.int32),
+        dep=dep,
+        mlp_window=core.mlp_window(profile.mpki),
+        profile=profile,
+    )
+
+
+def to_ideal(trace: Trace, n_banks: int, n_subarrays: int) -> Trace:
+    """Rewrite a trace so every subarray becomes its own real bank ("Ideal")."""
+    return dataclasses.replace(
+        trace,
+        bank=(trace.bank * n_subarrays + trace.subarray).astype(np.int32),
+        subarray=np.zeros_like(trace.subarray),
+    )
+
+
+def stack_traces(traces: Sequence[Trace]) -> dict[str, np.ndarray]:
+    """Stack equal-length traces into [W, N] arrays for vmapped simulation."""
+    n = len(traces[0])
+    assert all(len(t) == n for t in traces), "traces must be equal length to stack"
+    return {
+        "bank": np.stack([t.bank for t in traces]),
+        "subarray": np.stack([t.subarray for t in traces]),
+        "row": np.stack([t.row for t in traces]),
+        "is_write": np.stack([t.is_write for t in traces]),
+        "gap": np.stack([t.gap for t in traces]),
+        "dep": np.stack([t.dep for t in traces]),
+        "mlp_window": np.array([t.mlp_window for t in traces], dtype=np.int32),
+    }

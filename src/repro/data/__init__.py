@@ -1,0 +1,4 @@
+from repro.data.synth import batch_shapes, make_batch
+from repro.data.pipeline import DataPipeline
+
+__all__ = ["batch_shapes", "make_batch", "DataPipeline"]

@@ -1,0 +1,3 @@
+from repro.fault.watchdog import StepWatchdog, SupervisedRun
+
+__all__ = ["StepWatchdog", "SupervisedRun"]

@@ -1,0 +1,28 @@
+"""Pallas TPU kernels — the paper's mechanisms transplanted to the HBM->VMEM
+level (DESIGN.md Layer B).
+
+Each kernel package has: ``kernel.py`` (pl.pallas_call + BlockSpec),
+``ops.py`` (jit'd public wrapper, interpret-mode on CPU), ``ref.py``
+(pure-jnp oracle used by the tests' assert_allclose sweeps).
+
+  masa_gemm       -- tiled matmul with a residency-order knob: the
+                     weight-stationary grid order keeps a weight tile
+                     "activated" across consecutive steps (row-buffer hits)
+  ssd_scan        -- Mamba-2 SSD chunked scan; chunk state carried in VMEM
+                     scratch across sequential grid steps (SALP-1 pipeline)
+  moe_gemm        -- grouped expert GEMM; the scalar-prefetched per-block
+                     expert id designates the resident weight tile (SA_SEL)
+  paged_attention -- decode attention over a paged KV cache via block-table
+                     indirection; pages are rows, page slots subarrays
+  flash_attention -- fused attention forward (beyond-paper perf work on the
+                     memory roofline term: the S x S score matrix never
+                     reaches HBM)
+"""
+from repro.kernels.masa_gemm.ops import masa_gemm
+from repro.kernels.ssd_scan.ops import ssd_scan
+from repro.kernels.moe_gemm.ops import grouped_matmul
+from repro.kernels.paged_attention.ops import paged_attention
+from repro.kernels.flash_attention.ops import flash_attention
+
+__all__ = ["masa_gemm", "ssd_scan", "grouped_matmul", "paged_attention",
+           "flash_attention"]

@@ -1,0 +1,38 @@
+"""Public wrapper: model-layout GQA -> fused attention kernel.
+
+Drop-in for `repro.models.attention.attention`'s core (post-QKV): expands GQA
+by *indexing* (no materialized repeat — the kernel's K/V BlockSpecs view the
+same pages for all heads of a group)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_kernel
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bk", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, bq: int = 128, bk: int = 128,
+                    interpret: bool | None = None) -> jax.Array:
+    """q [B,S,H,hd], k/v [B,S,Hkv,hd] -> out [B,S,H,hd]."""
+    if interpret is None:
+        interpret = _interpret_default()
+    b, s, h, hd = q.shape
+    hkv = k.shape[2]
+    groups = h // hkv
+    # repeat KV per group at the layout level (gather view, not compute)
+    k = jnp.repeat(k, groups, axis=2)
+    v = jnp.repeat(v, groups, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+    out = flash_attention_kernel(qf, kf, vf, causal=causal, bq=bq, bk=bk,
+                                 interpret=interpret)
+    return out.reshape(b, h, s, hd).transpose(0, 2, 1, 3)

@@ -1,0 +1,3 @@
+from repro.kernels.masa_gemm.ops import masa_gemm
+
+__all__ = ["masa_gemm"]

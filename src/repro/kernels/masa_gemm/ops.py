@@ -1,0 +1,31 @@
+"""Public wrapper for the MASA-tiled matmul."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.masa_gemm.kernel import masa_gemm_kernel
+
+# VMEM budget for the weight-stationary whole-K panel (bytes, conservative)
+_VMEM_PANEL_LIMIT = 8 * 1024 * 1024
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "order", "interpret"))
+def masa_gemm(a: jax.Array, b: jax.Array, *, bm: int = 128, bn: int = 128,
+              bk: int = 128, order: str = "output_stationary",
+              interpret: bool | None = None) -> jax.Array:
+    """C = A @ B with explicit VMEM residency scheduling (see kernel.py)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    k = a.shape[1]
+    if order == "weight_stationary":
+        panel = (bm * k + k * bn) * a.dtype.itemsize
+        if panel > _VMEM_PANEL_LIMIT:
+            order = "output_stationary"  # K panel too large: fall back
+    return masa_gemm_kernel(a, b, bm=bm, bn=bn, bk=bk, order=order,
+                            interpret=interpret)

@@ -1,0 +1,7 @@
+"""Pure-jnp oracle for masa_gemm."""
+import jax
+import jax.numpy as jnp
+
+
+def masa_gemm_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(a.dtype)

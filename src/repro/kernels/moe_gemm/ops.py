@@ -1,0 +1,35 @@
+"""Public wrapper for the grouped expert GEMM.
+
+Contract: ``x_sorted`` is the MoE dispatch buffer flattened to [E*C, D] (C =
+per-expert capacity, a multiple of the token block bt), so token blocks never
+straddle experts and ``block_eids = arange(E*C/bt) // (C/bt)``. Helper
+``capacity_block_eids`` builds that designation vector.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.moe_gemm.kernel import grouped_matmul_kernel
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def capacity_block_eids(n_experts: int, capacity: int, bt: int) -> jax.Array:
+    assert capacity % bt == 0, (capacity, bt)
+    return (jnp.arange(n_experts * capacity // bt, dtype=jnp.int32)
+            // (capacity // bt))
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "bf", "interpret"))
+def grouped_matmul(x_sorted: jax.Array, w: jax.Array, block_eids: jax.Array, *,
+                   bt: int = 128, bf: int = 128,
+                   interpret: bool | None = None) -> jax.Array:
+    if interpret is None:
+        interpret = _interpret_default()
+    return grouped_matmul_kernel(x_sorted, w, block_eids, bt=bt, bf=bf,
+                                 interpret=interpret)

@@ -1,0 +1,13 @@
+"""Oracle for grouped_matmul: per-block dense gather-matmul."""
+import jax
+import jax.numpy as jnp
+
+
+def grouped_matmul_ref(x_sorted: jax.Array, w: jax.Array,
+                       block_eids: jax.Array, bt: int) -> jax.Array:
+    t, d = x_sorted.shape
+    xb = x_sorted.reshape(t // bt, bt, d)
+    wb = w[block_eids]                                  # [nb, D, F]
+    y = jnp.einsum("ntd,ndf->ntf", xb, wb,
+                   preferred_element_type=jnp.float32)
+    return y.reshape(t, w.shape[-1]).astype(x_sorted.dtype)

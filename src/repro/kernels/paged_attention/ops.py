@@ -1,0 +1,29 @@
+"""Public wrapper for paged decode attention."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.paged_attention.kernel import paged_attention_kernel
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                    block_table: jax.Array, seq_lens: jax.Array,
+                    interpret: bool | None = None) -> jax.Array:
+    """q [B,KVH,G,hd]; pages [P,page,KVH,hd]; block_table [B,n]; seq_lens [B].
+
+    Entries of block_table beyond a sequence's length may be arbitrary; they
+    are clamped here and masked inside the kernel by seq_lens."""
+    if interpret is None:
+        interpret = _interpret_default()
+    block_table = jnp.clip(block_table, 0, k_pages.shape[0] - 1).astype(jnp.int32)
+    return paged_attention_kernel(q, k_pages, v_pages, block_table,
+                                  seq_lens.astype(jnp.int32),
+                                  interpret=interpret)

@@ -1,0 +1,26 @@
+"""Oracle for paged_attention: gather pages densely, masked softmax decode."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def paged_attention_ref(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                        block_table: jax.Array, seq_lens: jax.Array) -> jax.Array:
+    bsz, kvh, g, hd = q.shape
+    page = k_pages.shape[1]
+    n_pages = block_table.shape[1]
+    s_max = n_pages * page
+
+    k = k_pages[block_table]          # [B, n_pages, page, KVH, hd]
+    v = v_pages[block_table]
+    k = k.reshape(bsz, s_max, kvh, hd)
+    v = v.reshape(bsz, s_max, kvh, hd)
+
+    scores = jnp.einsum("bhgd,bshd->bhgs", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * hd ** -0.5
+    valid = jnp.arange(s_max)[None, :] < seq_lens[:, None]
+    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)

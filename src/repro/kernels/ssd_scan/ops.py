@@ -1,0 +1,41 @@
+"""Public wrapper: model-layout SSD -> kernel layout -> back.
+
+``ssd_scan`` is a drop-in replacement for ``repro.models.ssm.ssd_chunked``
+(same signature for the n_groups=1 case the architectures use)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.kernel import ssd_scan_kernel
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x: jax.Array, dt: jax.Array, a_log: jax.Array,
+             b: jax.Array, c: jax.Array, d_skip: jax.Array,
+             chunk: int = 256, interpret: bool | None = None
+             ) -> tuple[jax.Array, jax.Array]:
+    """x [B,L,H,hd], dt [B,L,H], a_log [H], b/c [B,L,ds], d_skip [H]
+    -> y [B,L,H,hd], hT [B,H,ds,hd]   (matches models.ssm.ssd_chunked)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    bsz, L, H, hd = x.shape
+    ds = b.shape[-1]
+
+    A = -jnp.exp(a_log.astype(jnp.float32))
+    dt32 = dt.astype(jnp.float32)
+    l = (dt32 * A).transpose(0, 2, 1).reshape(bsz * H, L)            # [BH,L]
+    xr = (x.astype(jnp.float32) * dt32[..., None]).transpose(0, 2, 1, 3)
+    xr = xr.reshape(bsz * H, L, hd).astype(x.dtype)
+
+    y, hT = ssd_scan_kernel(xr, l, b, c, chunk=chunk, n_heads=H,
+                            interpret=interpret)
+    y = y.reshape(bsz, H, L, hd).transpose(0, 2, 1, 3)
+    y = y + x * d_skip.astype(x.dtype)[None, None, :, None]
+    return y, hT.reshape(bsz, H, ds, hd)

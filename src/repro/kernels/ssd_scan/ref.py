@@ -1,0 +1,33 @@
+"""Oracle for ssd_scan: the model's chunked jnp implementation, reshaped to the
+kernel's per-(batch*head) layout, plus a brute-force sequential scan used to
+cross-check both."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_ref(xr: jax.Array, l: jax.Array, b: jax.Array, c: jax.Array,
+                 n_heads: int) -> tuple[jax.Array, jax.Array]:
+    """Brute-force sequential recurrence (fp32).
+
+    xr [BH,L,hd] (dt-scaled inputs), l [BH,L] log decays, b/c [B,L,ds].
+    y_t = C_t . h_t ;  h_t = exp(l_t) h_{t-1} + B_t (x) xr_t
+    """
+    bh, L, hd = xr.shape
+    bsz = b.shape[0]
+    ds = b.shape[-1]
+    bexp = jnp.repeat(b, n_heads, axis=0).astype(jnp.float32)   # [BH,L,ds]
+    cexp = jnp.repeat(c, n_heads, axis=0).astype(jnp.float32)
+
+    def step(h, inp):
+        xr_t, l_t, b_t, c_t = inp
+        h = jnp.exp(l_t)[:, None, None] * h + b_t[:, :, None] * xr_t[:, None, :]
+        return h, jnp.einsum("bs,bsd->bd", c_t, h)
+
+    h0 = jnp.zeros((bh, ds, hd), jnp.float32)
+    hT, y = jax.lax.scan(
+        step, h0,
+        (xr.astype(jnp.float32).transpose(1, 0, 2), l.astype(jnp.float32).T,
+         bexp.transpose(1, 0, 2), cexp.transpose(1, 0, 2)))
+    return y.transpose(1, 0, 2).astype(xr.dtype), hT

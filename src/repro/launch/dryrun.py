@@ -1,0 +1,374 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: prove the distribution config is coherent without real
+hardware.
+
+For every (architecture x applicable shape) cell and both production meshes
+(single-pod 16x16, multi-pod 2x16x16), this driver:
+
+  1. builds the model + sharding specs (ShapeDtypeStructs only — no allocation),
+  2. ``jax.jit(step).lower(...)`` and ``.compile()``,
+  3. records ``memory_analysis()`` (fits-in-HBM proof), ``cost_analysis()``
+     (FLOPs/bytes for the roofline), and the per-device collective bytes
+     parsed from the partitioned HLO,
+  4. writes one JSON per cell under results/dryrun/.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch phi3-mini-3.8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--attn-impl chunked]
+"""
+import argparse
+import json
+import pathlib
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, get_config, list_archs
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.configs.shapes import shapes_for, skipped_shapes_for
+from repro.data.synth import batch_shapes
+from repro.distributed.sharding import (batch_pspecs, cache_pspecs, dp_axes,
+                                        pad_heads_for, param_pspecs)
+from repro.launch.mesh import make_production_mesh
+from repro.models import build_model
+from repro.serve.steps import make_decode_step, make_prefill_step
+from repro.train import make_optimizer, make_train_step
+
+RESULTS = pathlib.Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+# ---------------------------------------------------------------- collectives
+_OP_RE = re.compile(
+    r"=\s*(.+?)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+                "u8": 1, "pred": 1, "f64": 8, "s64": 8, "u64": 8, "f8e4m3fn": 1}
+
+
+def collective_bytes(hlo_text: str, default_group: int,
+                     loop_mult: int = 1) -> dict:
+    """Per-device bytes moved by each collective kind, parsed from the
+    partitioned HLO (shapes there are already per-device). Ring-model byte
+    multipliers. Handles tuple (variadic) collectives and both replica_groups
+    syntaxes. Collectives inside while bodies (the scan over layer blocks)
+    execute once per block: ``loop_mult`` (= n_repeats) scales them — the
+    instruction metadata carries "/while/" for those.
+    """
+    out = {"all-reduce": 0.0, "all-gather": 0.0, "reduce-scatter": 0.0,
+           "all-to-all": 0.0, "collective-permute": 0.0, "count": 0}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        result_seg, kind = m.group(1), m.group(2)
+        bytes_ = 0
+        for dtype, dims in _SHAPE_RE.findall(result_seg):
+            b = _DTYPE_BYTES.get(dtype, 4)
+            for d in dims.split(","):
+                if d:
+                    b *= int(d)
+            bytes_ += b
+        g = _GROUPS_BRACE_RE.search(line)
+        if g:
+            n = len(g.group(1).split(","))
+        else:
+            g2 = _GROUPS_IOTA_RE.search(line)
+            n = int(g2.group(2)) if g2 else default_group
+        n = max(n, 2)
+        if kind == "all-reduce":
+            moved = 2.0 * bytes_ * (n - 1) / n
+        elif kind == "all-gather":
+            moved = bytes_ * (n - 1) / n          # result is the gathered size
+        elif kind == "reduce-scatter":
+            moved = bytes_ * (n - 1)              # result is the shard
+        elif kind == "all-to-all":
+            moved = bytes_ * (n - 1) / n
+        else:  # collective-permute
+            moved = bytes_
+        if "/while/" in line:
+            moved *= loop_mult
+        out[kind] += moved
+        out["count"] += 1
+    out["total"] = sum(v for k, v in out.items() if k != "count")
+    return out
+
+
+# ---------------------------------------------------------------- specs
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=NamedSharding(mesh, spec))
+
+
+def params_struct(model, cfg: ModelConfig, mesh, params_dtype=None,
+                  tp_only: bool = False):
+    """tp_only: inference layout — drop the FSDP ("data") axis from parameter
+    specs (params replicated across data, sharded only by TP/EP), the
+    gather-free layout a serving deployment uses (+bf16 params)."""
+    ps = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+    specs = param_pspecs(cfg, ps, mesh)
+    if tp_only:
+        from jax.sharding import PartitionSpec as PS
+        specs = jax.tree.map(
+            lambda sp: PS(*(None if a == "data" else a for a in tuple(sp))),
+            specs, is_leaf=lambda x: isinstance(x, PS))
+    if params_dtype is None:
+        dtype = jnp.bfloat16 if cfg.optimizer_mode == "adafactor" else jnp.float32
+    else:
+        dtype = params_dtype
+    return jax.tree.map(
+        lambda s, sp: _sds(s.shape, dtype, mesh, sp), ps, specs,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct)), specs
+
+
+def batch_struct(cfg: ModelConfig, shape: ShapeSpec, mesh, seq_len=None,
+                 smart_batch: bool = False):
+    shapes = batch_shapes(cfg, shape.global_batch, seq_len or shape.seq_len)
+    specs = batch_pspecs(cfg, mesh, shape, smart=smart_batch)
+    return {k: _sds(shp, dt, mesh, specs[k]) for k, (shp, dt) in shapes.items()}
+
+
+def cache_struct(model, cfg: ModelConfig, mesh, batch: int, max_len: int,
+                 enc_len: int = 0, smart_batch: bool = False):
+    cs = jax.eval_shape(lambda: model.init_cache(batch, max_len, enc_len=enc_len))
+    specs = cache_pspecs(cfg, mesh, batch, smart=smart_batch)
+    return jax.tree.map(
+        lambda s, sp: _sds(s.shape, s.dtype, mesh, sp), cs, specs,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+# ---------------------------------------------------------------- lowering
+def build_cell(arch: str, shape_name: str, multi_pod: bool,
+               attn_impl: str | None = None,
+               cfg_override: ModelConfig | None = None,
+               scan_unroll: bool = False,
+               params_dtype=None, tp_only: bool = False,
+               no_seq_parallel: bool = False, smart_batch: bool = False,
+               decode_grouped: bool = False):
+    """Return (lower_fn, mesh) for one cell; lower_fn() -> lowered."""
+    cfg = cfg_override or get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    dp = dp_axes(mesh, cfg.pure_dp)
+    if attn_impl is None:
+        attn_impl = "chunked" if shape.kind == "prefill" else "naive"
+    carry = None
+    if not cfg.pure_dp and shape.kind == "train" and not no_seq_parallel:
+        carry = P(dp, "model", None)          # sequence-parallel saved carry
+    model = build_model(cfg, pad_heads=pad_heads_for(cfg, mesh),
+                        attn_impl=attn_impl, carry_spec=carry,
+                        scan_unroll=scan_unroll, decode_grouped=decode_grouped)
+
+    if shape.kind == "train":
+        opt = make_optimizer(cfg.optimizer_mode)
+        step_fn = make_train_step(model, opt)
+        p_s, p_specs = params_struct(model, cfg, mesh, params_dtype=params_dtype,
+                                     tp_only=tp_only)
+        o_shape = jax.eval_shape(lambda: opt.init(
+            jax.tree.map(lambda s: jnp.zeros(s.shape, jnp.float32), p_s)))
+        o_specs = opt.state_pspecs(p_specs, p_s)
+        o_s = jax.tree.map(lambda s, sp: _sds(s.shape, s.dtype, mesh, sp),
+                           o_shape, o_specs,
+                           is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+        b_s = batch_struct(cfg, shape, mesh)
+        step_s = _sds((), jnp.int32, mesh, P())
+
+        def lower():
+            with mesh:
+                return jax.jit(step_fn).lower(p_s, o_s, b_s, step_s)
+        return lower, mesh, model
+
+    if shape.kind == "prefill":
+        step_fn = make_prefill_step(model)
+        p_s, _ = params_struct(model, cfg, mesh, params_dtype=params_dtype,
+                               tp_only=tp_only)
+        b_s = batch_struct(cfg, shape, mesh)
+
+        def lower():
+            with mesh:
+                return jax.jit(step_fn).lower(p_s, b_s)
+        return lower, mesh, model
+
+    # decode: one new token against a KV cache of seq_len
+    step_fn = make_decode_step(model)
+    p_s, _ = params_struct(model, cfg, mesh, params_dtype=params_dtype,
+                           tp_only=tp_only)
+    b = shape.global_batch
+    enc_len = shape.seq_len if cfg.encoder_decoder else 0
+    c_s = cache_struct(model, cfg, mesh, b, shape.seq_len, enc_len=enc_len,
+                       smart_batch=smart_batch)
+    dp = dp_axes(mesh, cfg.pure_dp)
+    dp_sz = 1
+    for a in dp:
+        dp_sz *= mesh.shape[a]
+    tok_spec = P(dp, None) if b % dp_sz == 0 else (
+        P("data", None) if (smart_batch and b % mesh.shape["data"] == 0)
+        else P(None, None))
+    t_s = _sds((b, 1), jnp.int32, mesh, tok_spec)
+    l_s = _sds((), jnp.int32, mesh, P())
+
+    def lower():
+        with mesh:
+            return jax.jit(step_fn).lower(p_s, t_s, c_s, l_s)
+    return lower, mesh, model
+
+
+def _loop_corrected_cost(arch: str, shape_name: str, multi_pod: bool,
+                         **knobs) -> dict:
+    """XLA's cost analysis counts a while body ONCE — independent of the trip
+    count — so scanned-layer models under-report FLOPs/bytes. Re-lower the
+    cell at n_repeats=1 and 2 with the layer scans fully UNROLLED (and naive
+    attention, which has no inner loops) and extrapolate linearly:
+    cost(R) = c1 + (c2 - c1) * (R - 1)."""
+    import dataclasses as dc
+    cfg = get_config(arch)
+    vals = {}
+    # R=2 vs R=4 (not 1 vs 2): GSPMD propagation can pick different shardings
+    # for a single-block model, breaking linearity; 2->4 is stable.
+    for r in (2, 4):
+        cfg_r = dc.replace(cfg, n_repeats=r,
+                           enc_repeats=r if cfg.encoder_decoder else 0)
+        lower_fn, _, _ = build_cell(arch, shape_name, multi_pod,
+                                    attn_impl=knobs.pop("measure_attn_impl", "naive"),
+                                    cfg_override=cfg_r,
+                                    scan_unroll=True, **knobs)
+        ca = lower_fn().compile().cost_analysis() or {}
+        vals[r] = (float(ca.get("flops", 0.0)),
+                   float(ca.get("bytes accessed", 0.0)))
+    r_full = cfg.n_repeats
+    f2, b2 = vals[2]
+    f4, b4 = vals[4]
+    fpb, bpb = (f4 - f2) / 2, (b4 - b2) / 2
+    return {"flops_corrected": f2 + fpb * (r_full - 2),
+            "bytes_corrected": b2 + bpb * (r_full - 2),
+            "flops_per_block": fpb}
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             attn_impl: str | None = None, save: bool = True,
+             correct_loops: bool | None = None,
+             params_dtype=None, tp_only: bool = False,
+             no_seq_parallel: bool = False, variant: str = "",
+             measure_attn_impl: str = "naive", smart_batch: bool = False,
+             decode_grouped: bool = False) -> dict:
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    if correct_loops is None:
+        correct_loops = not multi_pod      # roofline table is single-pod only
+    t0 = time.time()
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name, "ok": False,
+           "variant": variant}
+    try:
+        lower_fn, mesh, model = build_cell(arch, shape_name, multi_pod, attn_impl,
+                                           params_dtype=params_dtype,
+                                           tp_only=tp_only,
+                                           no_seq_parallel=no_seq_parallel,
+                                           smart_batch=smart_batch,
+                                           decode_grouped=decode_grouped)
+        lowered = lower_fn()
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        ca = compiled.cost_analysis() or {}
+        ma = compiled.memory_analysis()
+        hlo = compiled.as_text()
+        n_dev = mesh.size
+        coll = collective_bytes(hlo, default_group=n_dev,
+                                loop_mult=get_config(arch).n_repeats)
+
+        if correct_loops:
+            rec.update(_loop_corrected_cost(
+                arch, shape_name, multi_pod, params_dtype=params_dtype,
+                tp_only=tp_only, no_seq_parallel=no_seq_parallel,
+                smart_batch=smart_batch, decode_grouped=decode_grouped,
+                measure_attn_impl=measure_attn_impl))
+
+        rec.update(
+            ok=True,
+            lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+            flops=float(ca.get("flops", 0.0)),
+            bytes_accessed=float(ca.get("bytes accessed", 0.0)),
+            collectives=coll,
+            n_devices=n_dev,
+            memory=dict(
+                argument_bytes=getattr(ma, "argument_size_in_bytes", None),
+                output_bytes=getattr(ma, "output_size_in_bytes", None),
+                temp_bytes=getattr(ma, "temp_size_in_bytes", None),
+                peak_bytes=getattr(ma, "peak_memory_in_bytes", None),
+                generated_code_bytes=getattr(ma, "generated_code_size_in_bytes", None),
+            ),
+            attn_impl=attn_impl or ("chunked" if SHAPES[shape_name].kind == "prefill"
+                                    else "naive"),
+        )
+        print(f"[dryrun] OK  {arch:28s} {shape_name:12s} {mesh_name:8s} "
+              f"lower={t_lower:5.1f}s compile={t_compile:6.1f}s "
+              f"flops={rec['flops']:.3e} coll={coll['total']:.3e}B")
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+        print(f"[dryrun] FAIL {arch} {shape_name} {mesh_name}: {rec['error']}")
+    if save:
+        RESULTS.mkdir(parents=True, exist_ok=True)
+        tag = f"{arch}_{shape_name}_{mesh_name}"
+        if variant:
+            tag += f"__{variant}"
+        (RESULTS / f"{tag}.json").write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def all_cells() -> list[tuple[str, str]]:
+    cells = []
+    for arch in list_archs():
+        cfg = get_config(arch)
+        for shape in shapes_for(cfg):
+            cells.append((arch, shape.name))
+    return cells
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--attn-impl", type=str, default=None,
+                    choices=(None, "naive", "chunked"))
+    args = ap.parse_args()
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+
+    if args.all:
+        ok = fail = 0
+        for arch, shape in all_cells():
+            for mp in meshes:
+                rec = run_cell(arch, shape, mp, args.attn_impl)
+                ok += rec["ok"]
+                fail += not rec["ok"]
+                jax.clear_caches()
+        # document the skips
+        for arch in list_archs():
+            for sname, why in skipped_shapes_for(get_config(arch)):
+                print(f"[dryrun] SKIP {arch} {sname}: {why}")
+        print(f"[dryrun] done: {ok} ok, {fail} failed")
+        raise SystemExit(1 if fail else 0)
+
+    assert args.arch and args.shape, "--arch/--shape or --all"
+    for mp in meshes:
+        rec = run_cell(args.arch, args.shape, mp, args.attn_impl)
+        if not rec["ok"]:
+            raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Serving launcher: continuous batching with the SALP-aware scheduler.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch phi3-mini-3.8b --reduced \\
+      --requests 12 --shared-prefix 0.5
+
+Runs the ServingEngine on a reduced model (CPU container) or the full config
+(real cluster), reporting throughput and the SALP cost-model statistics
+(scheduled vs FIFO page-access cost).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.dram.policies import Policy
+from repro.models import build_model
+from repro.serve.engine import ServingEngine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--shared-prefix", type=float, default=0.5,
+                    help="fraction of requests sharing a prompt prefix")
+    ap.add_argument("--policy", default="MASA",
+                    choices=[p.name for p in Policy])
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced(128)
+    model = build_model(cfg, dtype=jax.numpy.float32)
+    params = model.init(jax.random.key(args.seed))
+
+    engine = ServingEngine(model, params, max_batch=args.max_batch,
+                           policy=Policy[args.policy])
+    rng = np.random.default_rng(args.seed)
+    t0 = time.perf_counter()
+    for rid in range(args.requests):
+        prompt = rng.integers(0, cfg.vocab_size, args.prompt_len).tolist()
+        share = rid - 1 if (rid > 0 and rng.random() < args.shared_prefix) else None
+        engine.submit(rid, prompt, args.max_new, shared_prefix_of=share)
+    stats = engine.run(max_steps=10_000)
+    dt = time.perf_counter() - t0
+    print(f"[serve] {stats.tokens} tokens in {dt:.1f}s "
+          f"({stats.tokens / max(dt, 1e-9):.1f} tok/s), "
+          f"SALP-scheduled page cost vs FIFO: -{100 * stats.cost_reduction:.1f}%")
+
+
+if __name__ == "__main__":
+    main()

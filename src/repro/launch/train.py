@@ -1,0 +1,73 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-135m --reduced \\
+      --steps 200 --ckpt-dir /tmp/ckpt
+
+On a real cluster each host runs this under its own process with
+``jax.distributed.initialize()`` (flag --distributed); on the CPU container,
+--reduced runs the full loop end-to-end at smoke scale. The supervision policy
+(bounded restarts from the latest checkpoint) and the step-keyed data pipeline
+make restarts exact (DESIGN.md Sec. 7).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import get_config
+from repro.data.pipeline import DataPipeline
+from repro.models import build_model
+from repro.train.loop import train
+from repro.train.optimizer import make_optimizer
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced same-family config (CPU-scale)")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--ckpt-dir", type=str, default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--width", type=int, default=128,
+                    help="reduced-config width")
+    ap.add_argument("--distributed", action="store_true",
+                    help="multi-host: jax.distributed.initialize()")
+    ap.add_argument("--fail-at-step", type=int, default=None,
+                    help="inject one crash (fault-tolerance demo)")
+    args = ap.parse_args()
+
+    if args.distributed:
+        jax.distributed.initialize()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced(args.width)
+    dtype = jax.numpy.float32 if args.reduced else jax.numpy.bfloat16
+    model = build_model(cfg, dtype=dtype)
+    opt = make_optimizer(cfg.optimizer_mode, lr=args.lr,
+                         warmup=min(50, args.steps // 10 + 1),
+                         total_steps=args.steps)
+    pipe = DataPipeline(cfg, args.batch, args.seq, seed=args.seed,
+                        host_index=jax.process_index(),
+                        n_hosts=jax.process_count(),
+                        dtype=dtype)
+
+    res = train(model, opt, pipe, total_steps=args.steps,
+                ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+                grad_accum=args.grad_accum, seed=args.seed,
+                fail_at_step=args.fail_at_step)
+    first = sum(res.losses[:10]) / max(len(res.losses[:10]), 1)
+    last = sum(res.losses[-10:]) / max(len(res.losses[-10:]), 1)
+    print(f"[train] done: {res.final_step} steps, loss {first:.3f} -> {last:.3f}, "
+          f"restarts={res.restarts}, stragglers={res.straggler_events}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,187 @@
+"""Grouped-query attention: training/prefill (naive or chunked online-softmax)
+and single-token decode against a KV cache.
+
+Shapes: x [B, S, D]; q [B, S, H, hd]; kv [B, S, Hkv, hd]; GQA groups
+G = H // Hkv. ``n_pad_heads`` supports the head-padding fallback for TP when
+H does not divide the model axis (DESIGN.md Sec. 5): padded heads exist in the
+parameters (zero-initialized) and are dropped from o_proj output by masking.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AttnConfig
+from repro.models.layers import Params, apply_rope, rope_angles, trunc_normal
+
+
+class KVCache(NamedTuple):
+    k: jax.Array   # [B, S_max, Hkv, hd]
+    v: jax.Array   # [B, S_max, Hkv, hd]
+
+
+def init_attention(key, d: int, cfg: AttnConfig, n_pad_heads: int = 0) -> Params:
+    h = cfg.n_heads + n_pad_heads
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": trunc_normal(ks[0], (d, h, cfg.head_dim), 1.0),
+        "wk": trunc_normal(ks[1], (d, cfg.n_kv_heads, cfg.head_dim), 1.0),
+        "wv": trunc_normal(ks[2], (d, cfg.n_kv_heads, cfg.head_dim), 1.0),
+        "wo": trunc_normal(ks[3], (h, cfg.head_dim, d), 1.0),
+    }
+    if n_pad_heads:
+        # padded heads: zero params => exact numerical equivalence
+        z = jnp.zeros((d, n_pad_heads, cfg.head_dim), jnp.float32)
+        p["wq"] = jnp.concatenate([p["wq"][:, :cfg.n_heads], z], axis=1)
+        p["wo"] = jnp.concatenate(
+            [p["wo"][:cfg.n_heads], jnp.zeros((n_pad_heads, cfg.head_dim, d), jnp.float32)], axis=0)
+    return p
+
+
+def _qkv(p: Params, x: jax.Array, cfg: AttnConfig, positions: jax.Array):
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+    sin, cos = rope_angles(positions, cfg.head_dim, cfg.rope_theta)
+    return apply_rope(q, sin, cos), apply_rope(k, sin, cos), v
+
+
+def _expand_kv(k: jax.Array, groups: int) -> jax.Array:
+    return jnp.repeat(k, groups, axis=2)
+
+
+def attention(p: Params, x: jax.Array, cfg: AttnConfig, *,
+              positions: jax.Array | None = None,
+              impl: str = "naive", q_chunk: int = 1024,
+              unroll: bool = False) -> jax.Array:
+    """Self-attention over a full sequence (train / prefill)."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    q, k, v = _qkv(p, x, cfg, positions)
+    h_total = q.shape[2]
+    groups = h_total // cfg.n_kv_heads
+    k = _expand_kv(k, groups)
+    v = _expand_kv(v, groups)
+    scale = cfg.head_dim ** -0.5
+
+    if impl == "chunked" and s > q_chunk:
+        out = _chunked_attention(q, k, v, scale, cfg.causal, q_chunk, unroll)
+    else:
+        scores = jnp.einsum("bqhk,bshk->bhqs", q, k) * scale
+        if cfg.causal:
+            mask = jnp.tril(jnp.ones((s, s), bool))
+            scores = jnp.where(mask[None, None], scores, -1e9)
+        probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(x.dtype)
+        out = jnp.einsum("bhqs,bshk->bqhk", probs, v)
+
+    return jnp.einsum("bqhk,hkd->bqd", out, p["wo"].astype(x.dtype))
+
+
+def _chunked_attention(q, k, v, scale, causal, q_chunk, unroll=False):
+    """Online-softmax over query chunks (flash-attention schedule in pure JAX):
+    peak memory O(q_chunk * S) instead of O(S^2). ``unroll`` unrolls the chunk
+    scan for the dry-run's cost measurement compiles."""
+    b, s, h, hd = q.shape
+    nq = s // q_chunk
+
+    q_ = q.reshape(b, nq, q_chunk, h, hd).transpose(1, 0, 3, 2, 4)  # [nq,B,H,qc,hd]
+    kt = k.transpose(0, 2, 3, 1)                                    # [B,H,hd,S]
+    vt = v.transpose(0, 2, 1, 3)                                    # [B,H,S,hd]
+
+    def one_chunk(_, args):
+        i, qc = args
+        scores = jnp.einsum("bhqk,bhks->bhqs", qc, kt) * scale      # [B,H,qc,S]
+        if causal:
+            qpos = i * q_chunk + jnp.arange(q_chunk)
+            mask = qpos[:, None] >= jnp.arange(s)[None, :]
+            scores = jnp.where(mask[None, None], scores, -1e9)
+        probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
+        return None, jnp.einsum("bhqs,bhsk->bhqk", probs, vt)       # [B,H,qc,hd]
+
+    _, out = jax.lax.scan(one_chunk, None, (jnp.arange(nq), q_),
+                          unroll=True if unroll else 1)             # [nq,B,H,qc,hd]
+    return out.transpose(1, 0, 3, 2, 4).reshape(b, s, h, hd)
+
+
+def prefill_attention(p: Params, x: jax.Array, cfg: AttnConfig, *,
+                      impl: str = "chunked",
+                      unroll: bool = False) -> tuple[jax.Array, KVCache]:
+    """Prefill: full self-attention + return the KV cache (pre-RoPE K stored
+    rotated, i.e. cache holds rotated keys — decode appends consistently)."""
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    q, k, v = _qkv(p, x, cfg, positions)
+    groups = q.shape[2] // cfg.n_kv_heads
+    scale = cfg.head_dim ** -0.5
+    ke, ve = _expand_kv(k, groups), _expand_kv(v, groups)
+    if impl == "chunked" and s > 1024:
+        out = _chunked_attention(q, ke, ve, scale, cfg.causal, 1024, unroll)
+    else:
+        scores = jnp.einsum("bqhk,bshk->bhqs", q, ke) * scale
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        scores = jnp.where(mask[None, None], scores, -1e9)
+        probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(x.dtype)
+        out = jnp.einsum("bhqs,bshk->bqhk", probs, ve)
+    y = jnp.einsum("bqhk,hkd->bqd", out, p["wo"].astype(x.dtype))
+    return y, KVCache(k=k, v=v)
+
+
+def decode_attention(p: Params, x: jax.Array, cfg: AttnConfig, cache: KVCache,
+                     cur_len: jax.Array, grouped: bool = False
+                     ) -> tuple[jax.Array, KVCache]:
+    """One-token decode: x [B, 1, D]; cache [B, S_max, Hkv, hd]; cur_len [] or [B].
+
+    ``grouped=True`` computes GQA without materializing the expanded KV
+    (q reshaped [B, Hkv, G, hd] against the raw cache): the cache keeps its
+    sequence sharding under GSPMD instead of being re-sharded to heads every
+    layer — the decode collective fix measured in EXPERIMENTS.md §Perf."""
+    b = x.shape[0]
+    s_max = cache.k.shape[1]
+    positions = jnp.broadcast_to(jnp.reshape(cur_len, (-1, 1)), (b, 1))
+    q, k_new, v_new = _qkv(p, x, cfg, positions)
+
+    # append to cache at cur_len
+    onehot = (jnp.arange(s_max)[None, :] == jnp.reshape(cur_len, (-1, 1)))  # [B,S]
+    k = cache.k + onehot[..., None, None] * k_new.astype(cache.k.dtype)
+    v = cache.v + onehot[..., None, None] * v_new.astype(cache.v.dtype)
+
+    scale = cfg.head_dim ** -0.5
+    valid = jnp.arange(s_max)[None, :] <= jnp.reshape(cur_len, (-1, 1))
+
+    if grouped:
+        groups = q.shape[2] // cfg.n_kv_heads
+        qg = q[:, 0].reshape(b, cfg.n_kv_heads, groups, cfg.head_dim)
+        scores = jnp.einsum("bhgd,bshd->bhgs", qg, k) * scale     # [B,Hkv,G,S]
+        scores = jnp.where(valid[:, None, None, :], scores, -1e9)
+        probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(x.dtype)
+        out = jnp.einsum("bhgs,bshd->bhgd", probs, v)             # [B,Hkv,G,hd]
+        out = out.reshape(b, 1, q.shape[2], cfg.head_dim)
+    else:
+        groups = q.shape[2] // cfg.n_kv_heads
+        ke, ve = _expand_kv(k, groups), _expand_kv(v, groups)
+        scores = jnp.einsum("bqhk,bshk->bhqs", q, ke) * scale     # [B,H,1,S]
+        scores = jnp.where(valid[:, None, None, :], scores, -1e9)
+        probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(x.dtype)
+        out = jnp.einsum("bhqs,bshk->bqhk", probs, ve)
+    y = jnp.einsum("bqhk,hkd->bqd", out, p["wo"].astype(x.dtype))
+    return y, KVCache(k=k, v=v)
+
+
+# --------------------------------------------------------------- cross-attn
+def cross_attention(p: Params, x: jax.Array, enc: jax.Array, cfg: AttnConfig) -> jax.Array:
+    """Decoder cross-attention (full; no causal mask; no RoPE on encoder keys)."""
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", enc, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", enc, p["wv"].astype(dt))
+    groups = q.shape[2] // cfg.n_kv_heads
+    k, v = _expand_kv(k, groups), _expand_kv(v, groups)
+    scores = jnp.einsum("bqhk,bshk->bhqs", q, k) * (cfg.head_dim ** -0.5)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(dt)
+    out = jnp.einsum("bhqs,bshk->bqhk", probs, v)
+    return jnp.einsum("bqhk,hkd->bqd", out, p["wo"].astype(dt))

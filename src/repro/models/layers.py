@@ -1,0 +1,95 @@
+"""Shared layers: norms, rotary embeddings, MLPs, embeddings.
+
+Everything is functional: ``init_*`` builds a param pytree (fp32), ``apply``
+consumes it. Compute happens in the activation dtype (bf16 by default); params
+are cast at use. Initializers are variance-scaled truncated normals.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = dict
+
+
+def trunc_normal(key, shape, scale: float, dtype=jnp.float32):
+    fan_in = shape[0] if len(shape) >= 1 else 1
+    std = scale / np.sqrt(max(fan_in, 1))
+    return std * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+
+
+# ----------------------------------------------------------------- RMSNorm
+def init_rmsnorm(d: int) -> Params:
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(p: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"]).astype(dt)
+
+
+# ----------------------------------------------------------------- RoPE
+def rope_angles(positions: jax.Array, head_dim: int, theta: float) -> tuple[jax.Array, jax.Array]:
+    """positions [*, S] -> (sin, cos) each [*, S, head_dim//2], fp32."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x: jax.Array, sin: jax.Array, cos: jax.Array) -> jax.Array:
+    """x [..., S, H, hd]; sin/cos [..., S, hd//2] broadcast over heads."""
+    dt = x.dtype
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    s, c = sin[..., None, :], cos[..., None, :]  # head axis
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(dt)
+
+
+# ----------------------------------------------------------------- MLP
+ACTS = {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}
+
+
+def init_mlp(key, d: int, d_ff: int, glu: bool) -> Params:
+    ks = jax.random.split(key, 3)
+    p = {"up": trunc_normal(ks[0], (d, d_ff), 1.0),
+         "down": trunc_normal(ks[1], (d_ff, d), 1.0)}
+    if glu:
+        p["gate"] = trunc_normal(ks[2], (d, d_ff), 1.0)
+    return p
+
+
+def mlp(p: Params, x: jax.Array, act: str = "silu", glu: bool = True) -> jax.Array:
+    dt = x.dtype
+    h = x @ p["up"].astype(dt)
+    if glu:
+        h = ACTS[act](x @ p["gate"].astype(dt)) * h
+    else:
+        h = ACTS[act](h)
+    return h @ p["down"].astype(dt)
+
+
+# ----------------------------------------------------------------- embeddings
+def init_embedding(key, vocab: int, d: int) -> Params:
+    return {"table": trunc_normal(key, (vocab, d), float(np.sqrt(d)))}
+
+
+def embed(p: Params, tokens: jax.Array, dtype) -> jax.Array:
+    return p["table"].astype(dtype)[tokens]
+
+
+def unembed(p: Params, x: jax.Array, vocab_size: int) -> jax.Array:
+    """Logits against the (possibly padded) table; padded ids are masked."""
+    table = p["table"]
+    logits = x @ table.astype(x.dtype).T
+    if table.shape[0] > vocab_size:
+        pad = table.shape[0] - vocab_size
+        neg = jnp.full((pad,), -1e9, logits.dtype)
+        logits = logits.at[..., vocab_size:].set(neg)
+    return logits

@@ -1,0 +1,109 @@
+"""Mixture-of-Experts FFN with sort-based (grouped-GEMM) dispatch.
+
+Tokens are routed top-k, sorted by expert id, scattered into per-expert
+capacity buffers, processed with a batched per-expert GEMM
+(``ecd,edf->ecf``), and combined with router weights. Under expert parallelism
+the buffer's expert axis shards over the model mesh axis and the scatter
+becomes the dispatch all-to-all.
+
+SALP mapping (DESIGN.md Layer B): the per-expert weight tile is the "subarray"
+whose residency the ``kernels/moe_gemm`` Pallas kernel designates per token
+block (SA_SEL); consecutive blocks routed to the same expert are the row-buffer
+hits. This module is the pure-XLA reference path.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.models.layers import ACTS, Params, trunc_normal
+
+
+def init_moe(key, d: int, cfg: MoEConfig, glu: bool) -> Params:
+    ks = jax.random.split(key, 5)
+    e, f = cfg.n_experts, cfg.d_ff_expert
+    p = {
+        "router": trunc_normal(ks[0], (d, e), 1.0),
+        "up": trunc_normal(ks[1], (e, d, f), 1.0),
+        "down": trunc_normal(ks[2], (e, f, d), 1.0),
+    }
+    if glu:
+        p["gate"] = trunc_normal(ks[3], (e, d, f), 1.0)
+    if cfg.n_shared_experts:
+        fs = f * cfg.n_shared_experts
+        p["shared_up"] = trunc_normal(ks[4], (d, fs), 1.0)
+        p["shared_down"] = trunc_normal(ks[4], (fs, d), 1.0)
+        if glu:
+            p["shared_gate"] = trunc_normal(ks[4], (d, fs), 1.0)
+    return p
+
+
+def expert_capacity(n_tokens: int, cfg: MoEConfig) -> int:
+    cap = int(math.ceil(n_tokens * cfg.top_k / cfg.n_experts * cfg.capacity_factor))
+    return max(8, -(-cap // 8) * 8)  # round up to 8
+
+
+def route(p: Params, x2d: jax.Array, cfg: MoEConfig):
+    """x2d [T, D] -> (weights [T,k], expert_ids [T,k], aux_loss)."""
+    logits = (x2d @ p["router"].astype(x2d.dtype)).astype(jnp.float32)  # [T,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, ids = jax.lax.top_k(probs, cfg.top_k)
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+    # Switch-style load-balancing aux loss
+    density = jnp.mean(jax.nn.one_hot(ids[:, 0], cfg.n_experts), axis=0)
+    router_mean = jnp.mean(probs, axis=0)
+    aux = cfg.n_experts * jnp.sum(density * router_mean)
+    return w.astype(x2d.dtype), ids, aux
+
+
+def moe_ffn(p: Params, x: jax.Array, cfg: MoEConfig, act: str = "silu",
+            glu: bool = True) -> tuple[jax.Array, jax.Array]:
+    """x [B, S, D] -> (y [B, S, D], aux_loss). Sort-based dispatch with drops."""
+    b, s, d = x.shape
+    t = b * s
+    x2d = x.reshape(t, d)
+    w, ids, aux = route(p, x2d, cfg)
+    k = cfg.top_k
+    cap = expert_capacity(t, cfg)
+
+    flat_e = ids.reshape(-1)                              # [T*k] expert per slot
+    order = jnp.argsort(flat_e, stable=True)              # sort slots by expert
+    sorted_e = flat_e[order]
+    # position of each sorted slot within its expert's capacity buffer
+    pos_in_e = jnp.arange(t * k) - jnp.searchsorted(sorted_e, sorted_e, side="left")
+    keep = pos_in_e < cap                                 # dropped beyond capacity
+    dest = jnp.where(keep, sorted_e * cap + pos_in_e, t * 0 + cfg.n_experts * cap)
+
+    src_token = order // k                                # originating token
+    buf = jnp.zeros((cfg.n_experts * cap + 1, d), x.dtype)
+    buf = buf.at[dest].set(x2d[src_token])                # dispatch scatter
+    xg = buf[:-1].reshape(cfg.n_experts, cap, d)          # [E, C, D]
+
+    # batched per-expert GEMM (the grouped-GEMM the Pallas kernel replaces)
+    h = jnp.einsum("ecd,edf->ecf", xg, p["up"].astype(x.dtype))
+    if glu:
+        g = jnp.einsum("ecd,edf->ecf", xg, p["gate"].astype(x.dtype))
+        h = ACTS[act](g) * h
+    else:
+        h = ACTS[act](h)
+    yg = jnp.einsum("ecf,efd->ecd", h, p["down"].astype(x.dtype))  # [E, C, D]
+
+    # combine: gather back to slots, weight, sum over k
+    yflat = yg.reshape(cfg.n_experts * cap, d)
+    slot_y = jnp.where(keep[:, None], yflat[jnp.minimum(dest, cfg.n_experts * cap - 1)], 0)
+    unsort = jnp.zeros((t * k, d), x.dtype).at[order].set(slot_y)
+    y = jnp.sum(unsort.reshape(t, k, d) * w[..., None], axis=1)
+
+    if cfg.n_shared_experts:
+        hs = x2d @ p["shared_up"].astype(x.dtype)
+        if glu:
+            hs = ACTS[act](x2d @ p["shared_gate"].astype(x.dtype)) * hs
+        else:
+            hs = ACTS[act](hs)
+        y = y + hs @ p["shared_down"].astype(x.dtype)
+
+    return y.reshape(b, s, d), aux * cfg.aux_loss_coef

@@ -1,0 +1,206 @@
+"""Mamba-2 (SSD, state-space duality) block — pure JAX reference.
+
+The chunked SSD computation here is the numerical oracle for the
+``kernels/ssd_scan`` Pallas kernel and the default model path. Layout follows
+the Mamba-2 paper [arXiv:2405.21060]:
+
+  in_proj: d -> [z(di), x(di)] and d -> [B(g*ds), C(g*ds), dt(H)]
+  causal depthwise conv over x and [B,C] (split params: depthwise conv is
+  per-channel, so splitting is mathematically identical and lets TP shard the
+  x-channels over the model axis while B/C/dt stay replicated — the n_groups=1
+  Mamba TP layout, DESIGN.md Sec. 5)
+  SSD: h_t = a_t h_{t-1} + (dt_t B_t) (x) x_t ; y_t = C_t . h_t + D x_t
+       a_t = exp(dt_t * A), A = -exp(A_log)  (per head)
+  gated norm: y = RMSNorm(y * silu(z)); out_proj: di -> d
+
+The chunk recurrence (inter-chunk state carried through a scan while
+intra-chunk work is dense matmuls) is the SALP-1 pipeline pattern at the
+kernel level: the state stays "activated" across grid steps (DESIGN.md B.1).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMConfig
+from repro.models.layers import Params, trunc_normal
+
+
+class SSMState(NamedTuple):
+    conv_x: jax.Array   # [B, d_conv-1, di]      rolling conv inputs (x part)
+    conv_bc: jax.Array  # [B, d_conv-1, 2*g*ds]  rolling conv inputs (B/C part)
+    ssd: jax.Array      # [B, H, d_state, head_dim] recurrent state
+
+
+def init_ssm(key, d: int, cfg: SSMConfig) -> Params:
+    di = cfg.d_inner(d)
+    h = cfg.n_heads(d)
+    gds = cfg.n_groups * cfg.d_state
+    ks = jax.random.split(key, 6)
+    return {
+        "in_zx": trunc_normal(ks[0], (d, 2 * di), 1.0),
+        "in_bcdt": trunc_normal(ks[1], (d, 2 * gds + h), 1.0),
+        "conv_x_w": trunc_normal(ks[2], (cfg.d_conv, di), 2.0),
+        "conv_x_b": jnp.zeros((di,), jnp.float32),
+        "conv_bc_w": trunc_normal(ks[3], (cfg.d_conv, 2 * gds), 2.0),
+        "conv_bc_b": jnp.zeros((2 * gds,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h, dtype=jnp.float32)),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((h,), 0.01, jnp.float32))),  # softplus^-1
+        "norm_scale": jnp.ones((di,), jnp.float32),
+        "out_proj": trunc_normal(ks[4], (di, d), 1.0),
+    }
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, bias: jax.Array) -> jax.Array:
+    """Depthwise causal conv + SiLU: xbc [B,L,C], w [K,C] -> [B,L,C]."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * w[i].astype(xbc.dtype) for i in range(k))
+    return jax.nn.silu(out + bias.astype(xbc.dtype))
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, a_log: jax.Array,
+                b: jax.Array, c: jax.Array, d_skip: jax.Array,
+                chunk: int, h0: jax.Array | None = None
+                ) -> tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan (n_groups=1 layout).
+
+    x  [B, L, H, hd]  raw inputs (dt applied here)
+    dt [B, L, H]      post-softplus
+    b,c [B, L, ds]
+    returns y [B, L, H, hd], final state [B, H, ds, hd]
+    """
+    bsz, L, H, hd = x.shape
+    ds = b.shape[-1]
+    assert L % chunk == 0, (L, chunk)
+    n = L // chunk
+    f32 = jnp.float32
+
+    A = -jnp.exp(a_log.astype(f32))                       # [H], negative
+    dt32 = dt.astype(f32)
+    l = dt32 * A                                          # [B,L,H] log-decay
+    xr = (x.astype(f32) * dt32[..., None])                # dt-scaled input
+
+    xc = xr.reshape(bsz, n, chunk, H, hd)
+    lc = l.reshape(bsz, n, chunk, H)
+    bc = b.astype(f32).reshape(bsz, n, chunk, ds)
+    cc = c.astype(f32).reshape(bsz, n, chunk, ds)
+
+    cum = jnp.cumsum(lc, axis=2)                          # [B,n,Q,H]
+    total = cum[:, :, -1, :]                              # [B,n,H]
+
+    # intra-chunk: M_ij = (C_i.B_j) * exp(cum_i - cum_j) * (i >= j)
+    g = jnp.einsum("bnis,bnjs->bnij", cc, bc)             # [B,n,Q,Q]
+    delta = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # [B,n,Q,Q,H]
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    m = jnp.where(mask[None, None, :, :, None], jnp.exp(delta), 0.0)
+    y_intra = jnp.einsum("bnij,bnijh,bnjhd->bnihd", g, m, xc)
+
+    # per-chunk state contribution: S_n = sum_j exp(total - cum_j) B_j (x) x_j
+    w = jnp.exp(total[:, :, None, :] - cum)               # [B,n,Q,H]
+    s_chunk = jnp.einsum("bnjs,bnjh,bnjhd->bnhsd", bc, w, xc)  # [B,n,H,ds,hd]
+
+    # inter-chunk scan over n
+    if h0 is None:
+        h0 = jnp.zeros((bsz, H, ds, hd), f32)
+
+    def step(h, inp):
+        s_c, tot = inp                                    # [B,H,ds,hd], [B,H]
+        y_state = h                                       # state BEFORE this chunk
+        h_new = h * jnp.exp(tot)[..., None, None] + s_c
+        return h_new, y_state
+
+    hT, h_prevs = jax.lax.scan(step, h0,
+                               (s_chunk.transpose(1, 0, 2, 3, 4),
+                                total.transpose(1, 0, 2)))
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)            # [B,n,H,ds,hd]
+
+    y_inter = jnp.einsum("bnis,bnhsd,bnih->bnihd", cc, h_prevs, jnp.exp(cum))
+    y = (y_intra + y_inter).reshape(bsz, L, H, hd)
+    y = y + x.astype(f32) * d_skip.astype(f32)[None, None, :, None]
+    return y.astype(x.dtype), hT
+
+
+def _gated_norm(y: jax.Array, z: jax.Array, scale: jax.Array, eps: float = 1e-5):
+    dt = y.dtype
+    y32 = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(y32), axis=-1, keepdims=True)
+    return (y32 * jax.lax.rsqrt(var + eps) * scale).astype(dt)
+
+
+def ssm_forward(p: Params, x: jax.Array, d: int, cfg: SSMConfig,
+                return_state: bool = False, use_kernel: bool = False):
+    """Train/prefill forward. x [B,L,D] -> y [B,L,D] (+ SSMState)."""
+    bsz, L, _ = x.shape
+    di = cfg.d_inner(d)
+    H = cfg.n_heads(d)
+    gds = cfg.n_groups * cfg.d_state
+    dt_ = x.dtype
+
+    zx = x @ p["in_zx"].astype(dt_)
+    z, xs = jnp.split(zx, [di], axis=-1)
+    bcdt = x @ p["in_bcdt"].astype(dt_)
+    bc, dt_raw = jnp.split(bcdt, [2 * gds], axis=-1)
+
+    xs = _causal_conv(xs, p["conv_x_w"], p["conv_x_b"])
+    bc_conv = _causal_conv(bc, p["conv_bc_w"], p["conv_bc_b"])
+    b, c = jnp.split(bc_conv, [gds], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    xh = xs.reshape(bsz, L, H, cfg.head_dim)
+    if use_kernel:
+        from repro.kernels.ssd_scan.ops import ssd_scan
+        y, hT = ssd_scan(xh, dt, p["A_log"], b, c, p["D"], chunk=cfg.chunk)
+    else:
+        y, hT = ssd_chunked(xh, dt, p["A_log"], b, c, p["D"], cfg.chunk)
+    y = y.reshape(bsz, L, di)
+    y = _gated_norm(y, z, p["norm_scale"])
+    out = y @ p["out_proj"].astype(dt_)
+    if not return_state:
+        return out
+    # conv states = last (d_conv-1) PRE-conv inputs; recompute cheaply
+    tail = x[:, -(cfg.d_conv - 1):, :]
+    zx_t = tail @ p["in_zx"].astype(dt_)
+    xs_t = zx_t[..., di:]
+    bc_t = (tail @ p["in_bcdt"].astype(dt_))[..., :2 * gds]
+    return out, SSMState(conv_x=xs_t, conv_bc=bc_t, ssd=hT)
+
+
+def ssm_decode(p: Params, x: jax.Array, state: SSMState, d: int, cfg: SSMConfig
+               ) -> tuple[jax.Array, SSMState]:
+    """Single-token decode. x [B,1,D]."""
+    bsz = x.shape[0]
+    di = cfg.d_inner(d)
+    H = cfg.n_heads(d)
+    gds = cfg.n_groups * cfg.d_state
+    dt_ = x.dtype
+
+    zx = x[:, 0] @ p["in_zx"].astype(dt_)
+    z, xs_new = jnp.split(zx, [di], axis=-1)
+    bcdt = x[:, 0] @ p["in_bcdt"].astype(dt_)
+    bc_new, dt_raw = jnp.split(bcdt, [2 * gds], axis=-1)
+
+    # rolling causal convs
+    win_x = jnp.concatenate([state.conv_x, xs_new[:, None]], axis=1)   # [B,K,di]
+    win_bc = jnp.concatenate([state.conv_bc, bc_new[:, None]], axis=1)
+    xs = jax.nn.silu(jnp.einsum("bkc,kc->bc", win_x, p["conv_x_w"].astype(dt_))
+                     + p["conv_x_b"].astype(dt_))
+    bc = jax.nn.silu(jnp.einsum("bkc,kc->bc", win_bc, p["conv_bc_w"].astype(dt_))
+                     + p["conv_bc_b"].astype(dt_))
+    b, c = jnp.split(bc, [gds], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])   # [B,H]
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt * A)                                   # [B,H]
+    xh = xs.reshape(bsz, H, cfg.head_dim).astype(jnp.float32) * dt[..., None]
+    h = state.ssd * a[..., None, None] + jnp.einsum("bs,bhd->bhsd",
+                                                    b.astype(jnp.float32), xh)
+    y = jnp.einsum("bs,bhsd->bhd", c.astype(jnp.float32), h)
+    y = y + xs.reshape(bsz, H, cfg.head_dim).astype(jnp.float32) * p["D"][None, :, None]
+    y = y.reshape(bsz, di).astype(dt_)
+    y = _gated_norm(y, z, p["norm_scale"])
+    out = (y @ p["out_proj"].astype(dt_))[:, None]
+    return out, SSMState(conv_x=win_x[:, 1:], conv_bc=win_bc[:, 1:], ssd=h)

@@ -1,0 +1,25 @@
+"""pjit-ready serving step functions (used by the dry-run and the engine)."""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.builder import Model
+
+
+def make_prefill_step(model: Model) -> Callable:
+    def prefill_step(params, batch):
+        logits, cache = model.prefill(params, batch)
+        next_token = jnp.argmax(logits[:, -1], axis=-1)
+        return next_token, cache
+    return prefill_step
+
+
+def make_decode_step(model: Model) -> Callable:
+    def decode_step(params, tokens, cache, cur_len):
+        logits, cache = model.decode_step(params, tokens, cache, cur_len)
+        next_token = jnp.argmax(logits[:, -1], axis=-1)
+        return next_token, cache
+    return decode_step

@@ -1,0 +1,4 @@
+from repro.train.optimizer import Optimizer, make_optimizer
+from repro.train.step import make_train_step
+
+__all__ = ["Optimizer", "make_optimizer", "make_train_step"]

@@ -1,0 +1,138 @@
+"""Optimizers in pure JAX: AdamW and a low-memory variant.
+
+``adamw``     fp32 m/v (params are the fp32 master) — for <=110 B params.
+``adafactor`` no first moment + factored second moment (row/col means for
+              rank>=2 leaves), bf16 params — ~2.1 bytes/param total state,
+              the only way a 779 B-param MoE fits 256 x 16 GB (DESIGN.md
+              Sec. 5; T5/PaLM-style Adafactor training).
+
+Includes global-norm clipping and a warmup+cosine schedule. State pytrees
+mirror the parameter sharding (ZeRO-3 when params are FSDP-sharded).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+def warmup_cosine(base_lr: float, warmup: int, total: int,
+                  final_frac: float = 0.1) -> Callable:
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / jnp.maximum(warmup, 1)
+        t = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * (final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in jax.tree.leaves(tree)))
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    mode: str
+    lr_fn: Callable
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+    # ------------------------------------------------------------- state
+    def init(self, params: Params) -> Params:
+        if self.mode == "adamw":
+            return {
+                "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+                "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            }
+
+        def v_factored(p):
+            if p.ndim >= 2:
+                return {"row": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "col": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"full": jnp.zeros(p.shape, jnp.float32)}
+
+        return {"v": jax.tree.map(v_factored, params,
+                                  is_leaf=lambda x: hasattr(x, "shape"))}
+
+    def state_pspecs(self, param_specs: Params, params_tree: Params) -> Params:
+        """Optimizer-state PartitionSpecs mirroring the parameter specs.
+
+        ``params_tree``: real params or ShapeDtypeStructs (for leaf ranks)."""
+        from jax.sharding import PartitionSpec as P
+        if self.mode == "adamw":
+            return {"m": param_specs, "v": param_specs}
+
+        def v_spec(spec, p):
+            if p.ndim >= 2:
+                return {"row": P(*tuple(spec)[:-1]),
+                        "col": P(*(tuple(spec)[:-2] + tuple(spec)[-1:]))}
+            return {"full": spec}
+
+        return {"v": jax.tree.map(v_spec, param_specs, params_tree,
+                                  is_leaf=lambda x: isinstance(x, P))}
+
+    # ------------------------------------------------------------- update
+    def update(self, grads: Params, state: Params, params: Params,
+               step: jax.Array) -> tuple[Params, Params, dict]:
+        gnorm = global_norm(grads)
+        scale = jnp.minimum(1.0, self.clip_norm / (gnorm + 1e-9))
+        lr = self.lr_fn(step)
+        t = jnp.asarray(step, jnp.float32) + 1.0
+        bc1 = 1 - self.b1 ** t
+        bc2 = 1 - self.b2 ** t
+
+        if self.mode == "adamw":
+            def upd(g, m, v, p):
+                g = g.astype(jnp.float32) * scale
+                m = self.b1 * m + (1 - self.b1) * g
+                v = self.b2 * v + (1 - self.b2) * jnp.square(g)
+                u = (m / bc1) / (jnp.sqrt(v / bc2) + self.eps)
+                u = u + self.weight_decay * p.astype(jnp.float32)
+                return (p.astype(jnp.float32) - lr * u).astype(p.dtype), m, v
+
+            out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+            new_p = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+            new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+            new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+            return new_p, {"m": new_m, "v": new_v}, {"grad_norm": gnorm, "lr": lr}
+
+        # ---- adafactor (no first moment, factored second moment)
+        def upd_low(g, v, p):
+            g32 = g.astype(jnp.float32) * scale
+            g2 = jnp.square(g32) + 1e-30
+            if p.ndim >= 2:
+                row = self.b2 * v["row"] + (1 - self.b2) * jnp.mean(g2, axis=-1)
+                col = self.b2 * v["col"] + (1 - self.b2) * jnp.mean(g2, axis=-2)
+                # rank-1 reconstruction (Adafactor)
+                denom = jnp.mean(row, axis=-1, keepdims=True) + 1e-30
+                vhat = row[..., :, None] * col[..., None, :] / denom[..., None]
+                new_v = {"row": row, "col": col}
+            else:
+                full = self.b2 * v["full"] + (1 - self.b2) * g2
+                vhat = full
+                new_v = {"full": full}
+            u = g32 / (jnp.sqrt(vhat / bc2) + self.eps)
+            u = u + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), new_v
+
+        out = jax.tree.map(upd_low, grads, state["v"], params)
+        def pick(i):
+            return jax.tree.map(lambda o: o[i], out,
+                                is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2)
+        return pick(0), {"v": pick(1)}, {"grad_norm": gnorm, "lr": lr}
+
+
+def make_optimizer(mode: str = "adamw", *, lr: float = 3e-4, warmup: int = 200,
+                   total_steps: int = 10_000, weight_decay: float = 0.1,
+                   clip_norm: float = 1.0) -> Optimizer:
+    return Optimizer(mode=mode, lr_fn=warmup_cosine(lr, warmup, total_steps),
+                     weight_decay=weight_decay, clip_norm=clip_norm)

@@ -1,0 +1,54 @@
+"""Train step assembly: loss -> grads (with optional microbatch accumulation)
+-> optimizer update. The returned function is pjit-ready: pure, takes
+(params, opt_state, batch, step)."""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.builder import Model
+from repro.train.optimizer import Optimizer
+
+
+def make_train_step(model: Model, optimizer: Optimizer,
+                    grad_accum: int = 1) -> Callable:
+    def loss_fn(params, batch):
+        return model.loss(params, batch)
+
+    def train_step(params, opt_state, batch, step):
+        if grad_accum == 1:
+            (loss, extras), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch)
+        else:
+            # split the batch dim into microbatches and accumulate
+            def micro(batch_i):
+                return jax.value_and_grad(loss_fn, has_aux=True)(params, batch_i)
+
+            def split(x):
+                b = x.shape[0]
+                assert b % grad_accum == 0, (b, grad_accum)
+                return x.reshape(grad_accum, b // grad_accum, *x.shape[1:])
+
+            micro_batches = jax.tree.map(split, batch)
+
+            def body(acc, mb):
+                (loss, extras), grads = micro(mb)
+                acc_grads, acc_loss = acc
+                acc_grads = jax.tree.map(jnp.add, acc_grads, grads)
+                return (acc_grads, acc_loss + loss), extras
+
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), extras = jax.lax.scan(body, (zero, jnp.float32(0)),
+                                                micro_batches)
+            grads = jax.tree.map(lambda g: g / grad_accum, gsum)
+            loss = lsum / grad_accum
+            extras = jax.tree.map(lambda x: x[-1], extras)
+
+        params, opt_state, opt_metrics = optimizer.update(grads, opt_state,
+                                                          params, step)
+        metrics = {"loss": loss, **extras, **opt_metrics}
+        return params, opt_state, metrics
+
+    return train_step

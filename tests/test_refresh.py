@@ -1,0 +1,74 @@
+"""Refresh modeling (paper Sec. 6.1 / DSARP extension) invariants."""
+import numpy as np
+import pytest
+
+from repro.core.dram import (PAPER_WORKLOADS, Policy, SimConfig,
+                             generate_trace, simulate)
+
+OFF = SimConfig()
+REF = SimConfig(refresh=True)
+DSARP = SimConfig(refresh=True, dsarp=True)
+
+
+@pytest.fixture(scope="module")
+def trace():
+    prof = next(p for p in PAPER_WORKLOADS if p.name == "lbm")
+    return generate_trace(prof, 4000, seed=7)
+
+
+def _cyc(trace, policy, cfg):
+    return int(simulate(trace, policy, cfg).total_cycles)
+
+
+def test_refresh_slows_everything(trace):
+    for pol in (Policy.BASELINE, Policy.SALP2, Policy.MASA):
+        assert _cyc(trace, pol, REF) > _cyc(trace, pol, OFF), pol
+
+
+def test_dsarp_needs_masa(trace):
+    """Subarray-granular refresh only helps a policy that can serve other
+    subarrays concurrently: under the baseline, DSARP == blocking refresh."""
+    assert _cyc(trace, Policy.BASELINE, DSARP) == _cyc(trace, Policy.BASELINE, REF)
+
+
+def test_dsarp_recovers_most_of_the_penalty(trace):
+    off = _cyc(trace, Policy.MASA, OFF)
+    blocking = _cyc(trace, Policy.MASA, REF)
+    dsarp = _cyc(trace, Policy.MASA, DSARP)
+    assert off < dsarp <= blocking
+    recovered = 1 - (dsarp - off) / (blocking - off)
+    assert recovered > 0.5, recovered      # "most of the overhead"
+
+
+def test_refresh_overhead_scales_with_trfc(trace):
+    import dataclasses
+    big = SimConfig(refresh=True,
+                    timing=dataclasses.replace(OFF.timing, t_rfc=320))
+    assert (_cyc(trace, Policy.BASELINE, big)
+            > _cyc(trace, Policy.BASELINE, REF))
+
+
+class TestRowPolicy:
+    """Paper Sec. 9.3: closed-row policy sensitivity."""
+
+    def test_closed_row_kills_masa_locality(self, trace):
+        open_cfg = SimConfig()
+        closed = SimConfig(row_policy="closed")
+        # MASA == SALP-2 under closed rows (no open rows to re-hit)
+        m = int(simulate(trace, Policy.MASA, closed).total_cycles)
+        s2 = int(simulate(trace, Policy.SALP2, closed).total_cycles)
+        assert abs(m - s2) <= m * 0.01
+        # but MASA > SALP-2 under open rows (on this row-reuse-heavy trace)
+        m_o = int(simulate(trace, Policy.MASA, open_cfg).total_cycles)
+        s2_o = int(simulate(trace, Policy.SALP2, open_cfg).total_cycles)
+        assert m_o < s2_o
+
+    def test_closed_row_no_hits(self, trace):
+        res = simulate(trace, Policy.BASELINE, SimConfig(row_policy="closed"))
+        assert int(res.n_hit) == 0
+
+    def test_salp_overlap_survives_closed_rows(self, trace):
+        closed = SimConfig(row_policy="closed")
+        b = int(simulate(trace, Policy.BASELINE, closed).total_cycles)
+        s1 = int(simulate(trace, Policy.SALP1, closed).total_cycles)
+        assert s1 < b    # the PRE/ACT overlap is policy, not locality

@@ -14,6 +14,35 @@ import numpy as np
 N_REQUESTS = 8000
 SEED = 7
 
+#: Sweep artifacts (``repro.sweep/v1`` dicts) produced by benchmarks in this
+#: process; ``benchmarks.run`` folds them into its single bench artifact.
+SWEEPS: list[dict] = []
+
+
+def mem_intensive(min_mpki: float = 9.0):
+    """The memory-intensive subset (the regime where geometry matters)."""
+    from repro.core.dram import PAPER_WORKLOADS
+    return tuple(p for p in PAPER_WORKLOADS if p.mpki >= min_mpki)
+
+
+def run_grid(grid):
+    """Run a SweepGrid against the process-wide result cache.
+
+    All benchmarks of one ``benchmarks.run`` invocation share
+    ``GLOBAL_CACHE``, so a (workload, geometry, policy) cell is simulated at
+    most once per process no matter how many benchmarks touch it.
+    """
+    from repro.experiments import GLOBAL_CACHE, run_sweep
+    sweep = run_sweep(grid, GLOBAL_CACHE)
+    SWEEPS.append(sweep.to_json())
+    return sweep
+
+
+def per_sim_cell_us(sweep, us: float) -> float:
+    """us per actually-simulated cell (cache hits cost ~nothing and would
+    dilute the column into meaninglessness on warm caches)."""
+    return us / max(sweep.stats["simulated_cells"], 1)
+
 
 def timed(fn: Callable, *args, **kwargs):
     t0 = time.perf_counter()

@@ -1,31 +1,37 @@
 """Paper Figure 4: IPC improvement of SALP-1 / SALP-2 / MASA / Ideal over the
 subarray-oblivious baseline, per workload and averaged, plus the paper's
 mechanism-attribution statistics (MPKI of >5% gainers, SALP-2/WMPKI standouts,
-MASA SA_SEL:ACT ratio)."""
+MASA SA_SEL:ACT ratio).
+
+The 32-workload x 5-policy cross product is one declarative grid: five
+vmapped simulator calls (one per policy bucket), baseline cells shared with
+any other benchmark in the process via the result cache.
+"""
 from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import emit, suite_ipc, suite_traces, timed
+from benchmarks.common import N_REQUESTS, SEED, emit, per_sim_cell_us, run_grid, timed
 from repro.core.dram import PAPER_WORKLOADS, Policy
+from repro.experiments import SweepGrid
 
 PAPER_MEANS = {Policy.SALP1: 6.6, Policy.SALP2: 13.4, Policy.MASA: 16.7, Policy.IDEAL: 19.6}
+POLICIES = (Policy.BASELINE, Policy.SALP1, Policy.SALP2, Policy.MASA, Policy.IDEAL)
+
+
+def make_grid() -> SweepGrid:
+    return SweepGrid(name="fig4", workloads=PAPER_WORKLOADS, policies=POLICIES,
+                     n_requests=N_REQUESTS, seed=SEED)
 
 
 def run() -> dict:
-    traces = suite_traces()
-    ipc, res = {}, {}
-    us = {}
-    for pol in (Policy.BASELINE, Policy.SALP1, Policy.SALP2, Policy.MASA, Policy.IDEAL):
-        (out, t_us) = timed(suite_ipc, traces, pol)
-        ipc[pol], res[pol] = out
-        us[pol] = t_us / len(traces)
+    (sweep, us) = timed(run_grid, make_grid())
+    per_cell = per_sim_cell_us(sweep, us)
 
-    base = ipc[Policy.BASELINE]
-    gains = {pol: 100.0 * (ipc[pol] / base - 1) for pol in PAPER_MEANS}
+    gains = {pol: sweep.ipc_gain_pct(pol) for pol in PAPER_MEANS}
 
     for i, p in enumerate(PAPER_WORKLOADS):
-        emit(f"fig4.{p.name}", us[Policy.MASA],
+        emit(f"fig4.{p.name}", per_cell,
              "s1={:.1f}%;s2={:.1f}%;masa={:.1f}%;ideal={:.1f}%".format(
                  gains[Policy.SALP1][i], gains[Policy.SALP2][i],
                  gains[Policy.MASA][i], gains[Policy.IDEAL][i]))
@@ -34,7 +40,7 @@ def run() -> dict:
     for pol, paper in PAPER_MEANS.items():
         m = float(gains[pol].mean())
         summary[pol.pretty] = m
-        emit(f"fig4.MEAN.{pol.pretty}", us[pol], f"{m:.2f}%(paper={paper}%)")
+        emit(f"fig4.MEAN.{pol.pretty}", per_cell, f"{m:.2f}%(paper={paper}%)")
 
     # attribution stats from the paper's Section 4
     mpki = np.array([p.mpki for p in PAPER_WORKLOADS])
@@ -46,8 +52,8 @@ def run() -> dict:
     wmpki3 = np.array([PAPER_WORKLOADS[i].wmpki for i in top3])
     emit("fig4.stat.salp2_top3_wmpki", 0.0,
          f"min={wmpki3.min():.1f}(paper:>15WMPKI)")
-    sasel = np.asarray(res[Policy.MASA].n_sasel, np.float64)
-    acts = np.asarray(res[Policy.MASA].n_act, np.float64)
+    sasel = sweep.metric("n_sasel", policy=Policy.MASA)
+    acts = sweep.metric("n_act", policy=Policy.MASA)
     gm = gains[Policy.MASA]
     hi = gm > 30
     ratio_hi = (sasel[hi] / acts[hi]).mean() if hi.any() else 0.0

@@ -6,49 +6,58 @@ DSARP refreshes one subarray at a time while MASA serves the bank's other
 subarrays. We report the refresh-induced slowdown per policy and the fraction
 of the refresh penalty DSARP recovers (the paper's §6.1 claim: "such
 parallelization can eliminate most of the performance overhead of refresh").
+
+The refresh dimension is an explicit config list on one grid —
+(off / blocking / DSARP) x (BASELINE, MASA) — with the nonsensical
+baseline+DSARP point pruned (subarray-granular refresh needs MASA; under the
+baseline it is defined to equal blocking refresh).
 """
 from __future__ import annotations
 
-import numpy as np
-
-from benchmarks.common import SEED, emit, timed
-from repro.core.dram import PAPER_WORKLOADS, Policy, SimConfig, generate_trace, simulate_batch
+from benchmarks.common import SEED, emit, mem_intensive, per_sim_cell_us, run_grid, timed
+from repro.core.dram import Policy
+from repro.experiments import SweepGrid
 
 N = 4000
-SUBSET = [p for p in PAPER_WORKLOADS if p.mpki >= 12.0]
+SUBSET = mem_intensive(12.0)
 
 
-def _cycles(traces, policy, cfg):
-    res = simulate_batch(traces, policy, cfg)
-    return np.asarray(res.total_cycles, np.float64)
+def make_grid() -> SweepGrid:
+    return SweepGrid(
+        name="refresh",
+        workloads=SUBSET,
+        policies=(Policy.BASELINE, Policy.MASA),
+        n_requests=N,
+        seed=SEED,
+        configs=({}, {"refresh": True}, {"refresh": True, "dsarp": True}),
+        where=lambda pol, ov: not (pol == Policy.BASELINE and ov.get("dsarp")),
+    )
 
 
 def run() -> dict:
-    traces = [generate_trace(p, N, seed=SEED) for p in SUBSET]
-    cfg_off = SimConfig()
-    cfg_ref = SimConfig(refresh=True)
-    cfg_dsarp = SimConfig(refresh=True, dsarp=True)
+    (sweep, us) = timed(run_grid, make_grid())
+    per_cell = per_sim_cell_us(sweep, us)
 
-    out = {}
-    (base_off, us) = timed(_cycles, traces, Policy.BASELINE, cfg_off)
-    base_ref = _cycles(traces, Policy.BASELINE, cfg_ref)
-    masa_off = _cycles(traces, Policy.MASA, cfg_off)
-    masa_ref = _cycles(traces, Policy.MASA, cfg_ref)
-    masa_dsarp = _cycles(traces, Policy.MASA, cfg_dsarp)
+    base_off = sweep.metric("total_cycles", policy=Policy.BASELINE, refresh=False)
+    base_ref = sweep.metric("total_cycles", policy=Policy.BASELINE, refresh=True)
+    masa_off = sweep.metric("total_cycles", policy=Policy.MASA, refresh=False)
+    masa_ref = sweep.metric("total_cycles", policy=Policy.MASA,
+                            refresh=True, dsarp=False)
+    masa_dsarp = sweep.metric("total_cycles", policy=Policy.MASA,
+                              refresh=True, dsarp=True)
 
     slow_base = float((base_ref / base_off - 1).mean() * 100)
     slow_masa = float((masa_ref / masa_off - 1).mean() * 100)
     slow_dsarp = float((masa_dsarp / masa_off - 1).mean() * 100)
     recovered = 100 * (1 - slow_dsarp / max(slow_masa, 1e-9))
 
-    emit("refresh.slowdown.baseline", us / len(SUBSET), f"+{slow_base:.1f}%")
+    emit("refresh.slowdown.baseline", per_cell, f"+{slow_base:.1f}%")
     emit("refresh.slowdown.masa_blocking", 0.0, f"+{slow_masa:.1f}%")
     emit("refresh.slowdown.masa_dsarp", 0.0, f"+{slow_dsarp:.1f}%")
     emit("refresh.dsarp_penalty_recovered", 0.0,
          f"{recovered:.0f}%(paper_s6.1:'eliminates_most_of_the_overhead')")
-    out.update(slow_base=slow_base, slow_masa=slow_masa,
-               slow_dsarp=slow_dsarp, recovered_pct=recovered)
-    return out
+    return dict(slow_base=slow_base, slow_masa=slow_masa,
+                slow_dsarp=slow_dsarp, recovered_pct=recovered)
 
 
 if __name__ == "__main__":

@@ -1,57 +1,145 @@
-"""Benchmark orchestrator. One module per paper table/figure.
+"""Registry-driven benchmark runner.
 
-Usage:  PYTHONPATH=src python -m benchmarks.run [--only fig4,fig5,...]
+Usage:
+    PYTHONPATH=src python -m benchmarks.run [--suite paper,sens,...]
+                                            [--only fig4,fig5,...]
+                                            [--out artifacts/bench.json]
+                                            [--list]
 
-Prints ``name,us_per_call,derived`` CSV rows (see each module), then a summary
-block comparing headline numbers against the paper's claims.
+Each registry entry is a module exposing ``run() -> dict`` (its summary).
+Benchmarks built on the sweep subsystem share one process-wide result cache,
+so overlapping cells (every mechanism's baseline, notably) are simulated once.
+
+Output: ``name,us_per_call,derived`` CSV rows on stdout (one per paper
+table/figure entry) plus a single versioned JSON artifact (schema
+``repro.bench/v1``, see docs/experiments.md) containing every summary, every
+sweep's full per-cell results, and cache statistics.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import importlib
+import sys
 import time
 
-MODULES = [
-    ("fig4", "benchmarks.fig4_ipc"),           # Figure 4: IPC vs mechanism
-    ("fig5", "benchmarks.fig5_energy"),        # Figure 5: dynamic energy + row-hit
-    ("sens_subarrays", "benchmarks.sens_subarrays"),  # Sec. 9.2 sensitivity
-    ("multicore", "benchmarks.multicore_bench"),      # Sec. 4 / 9.3 multicore + TCM
-    ("kernels", "benchmarks.kernel_bench"),    # Layer B: Pallas kernel residency
-    ("serving", "benchmarks.serving_bench"),   # Layer C: SALP-aware scheduler
-    ("refresh", "benchmarks.refresh_bench"),   # Sec. 6.1 extension: DSARP
-    ("sens_banks", "benchmarks.sens_banks"),   # Sec. 1/9.2: banks-vs-subarrays cost
-    ("row_policy", "benchmarks.row_policy_bench"),  # Sec. 9.3: open vs closed row
-]
+
+@dataclasses.dataclass(frozen=True)
+class Bench:
+    key: str
+    module: str
+    suites: tuple[str, ...]
+    desc: str
 
 
-def main() -> None:
+REGISTRY: tuple[Bench, ...] = (
+    Bench("fig4", "benchmarks.fig4_ipc", ("paper",),
+          "Figure 4: IPC vs mechanism (32 workloads x 5 policies)"),
+    Bench("fig5", "benchmarks.fig5_energy", ("paper",),
+          "Figure 5: dynamic energy + row-hit rate"),
+    Bench("sens_subarrays", "benchmarks.sens_subarrays", ("sens",),
+          "Sec. 9.2: gains vs subarrays-per-bank (grid sweep)"),
+    Bench("sens_banks", "benchmarks.sens_banks", ("sens",),
+          "Sec. 9.2/1: more-banks cost vs MASA (grid sweep)"),
+    Bench("row_policy", "benchmarks.row_policy_bench", ("sens",),
+          "Sec. 9.3: open vs closed row policy"),
+    Bench("refresh", "benchmarks.refresh_bench", ("refresh",),
+          "Sec. 6.1 extension: DSARP refresh parallelization (grid sweep)"),
+    Bench("multicore", "benchmarks.multicore_bench", ("system",),
+          "Sec. 4/9.3: multicore + TCM scheduling (batched mixes)"),
+    Bench("kernels", "benchmarks.kernel_bench", ("accel",),
+          "Layer B: Pallas kernel residency"),
+    Bench("serving", "benchmarks.serving_bench", ("accel",),
+          "Layer C: SALP-aware scheduler"),
+    Bench("smoke", "benchmarks.smoke", ("smoke",),
+          "CI: tiny grid through the full sweep pipeline"),
+)
+
+
+def select(suite: str | None, only: str | None) -> list[Bench]:
+    suites = set(suite.split(",")) if suite else None
+    keys = set(only.split(",")) if only else None
+    out = []
+    for b in REGISTRY:
+        if keys is not None and b.key not in keys:
+            continue
+        if keys is None:
+            if suites is not None and not suites.intersection(b.suites):
+                continue
+            if suites is None and "smoke" in b.suites:
+                continue  # smoke only runs when asked for
+        out.append(b)
+    return out
+
+
+def main(argv: list[str] | None = None) -> dict:
     ap = argparse.ArgumentParser()
+    ap.add_argument("--suite", type=str, default=None,
+                    help="comma-separated suites: "
+                         + ",".join(sorted({s for b in REGISTRY for s in b.suites})))
     ap.add_argument("--only", type=str, default=None,
-                    help="comma-separated subset of: " + ",".join(k for k, _ in MODULES))
-    args = ap.parse_args()
-    only = set(args.only.split(",")) if args.only else None
+                    help="comma-separated keys (overrides --suite): "
+                         + ",".join(b.key for b in REGISTRY))
+    ap.add_argument("--out", type=str, default="artifacts/bench.json",
+                    help="path for the versioned JSON artifact ('' to disable)")
+    ap.add_argument("--list", action="store_true", help="list registry and exit")
+    args = ap.parse_args(argv)
+
+    if args.list:
+        for b in REGISTRY:
+            print(f"{b.key:15s} [{','.join(b.suites)}] {b.desc}")
+        return {}
+
+    known_suites = {s for b in REGISTRY for s in b.suites}
+    known_keys = {b.key for b in REGISTRY}
+    if args.suite and not set(args.suite.split(",")) <= known_suites:
+        ap.error(f"unknown suite(s) {set(args.suite.split(',')) - known_suites}; "
+                 f"choose from {sorted(known_suites)}")
+    if args.only and not set(args.only.split(",")) <= known_keys:
+        ap.error(f"unknown benchmark(s) {set(args.only.split(',')) - known_keys}; "
+                 f"see --list")
+
+    from benchmarks import common
+    from repro.experiments import GLOBAL_CACHE, bench_artifact, write_artifact
+
+    # scope the artifact to THIS invocation: main(argv) may be called
+    # repeatedly in one process (sweeps accumulate; cache stats are cumulative)
+    sweeps_start = len(common.SWEEPS)
+    hits0, misses0 = GLOBAL_CACHE.hits, GLOBAL_CACHE.misses
 
     print("name,us_per_call,derived")
-    summaries = {}
-    for key, modname in MODULES:
-        if only and key not in only:
-            continue
+    if args.only and args.suite:
+        print(f"# note: --only={args.only} overrides --suite={args.suite}")
+    summaries: dict[str, dict] = {}
+    for b in select(args.suite, args.only):
         try:
-            mod = importlib.import_module(modname)
+            mod = importlib.import_module(b.module)
         except ModuleNotFoundError as e:
-            print(f"{key}.SKIPPED,0.0,module_missing:{e.name}")
+            print(f"{b.key}.SKIPPED,0.0,module_missing:{e.name}")
             continue
         t0 = time.perf_counter()
         try:
-            summaries[key] = mod.run()
+            summaries[b.key] = mod.run()
         except Exception as e:  # a failing bench must not hide the others
-            print(f"{key}.FAILED,0.0,{type(e).__name__}:{e}")
+            print(f"{b.key}.FAILED,0.0,{type(e).__name__}:{e}")
             continue
-        print(f"{key}.TOTAL,{(time.perf_counter()-t0)*1e6:.0f},ok")
+        print(f"{b.key}.TOTAL,{(time.perf_counter()-t0)*1e6:.0f},ok")
+
+    run_sweeps = common.SWEEPS[sweeps_start:]
+    run_cache = {"entries": len(GLOBAL_CACHE), "hits": GLOBAL_CACHE.hits - hits0,
+                 "misses": GLOBAL_CACHE.misses - misses0}
+    doc = bench_artifact(results=summaries, sweeps=run_sweeps,
+                         argv=list(argv) if argv is not None else sys.argv[1:],
+                         cache_stats=run_cache)
+    if args.out:
+        path = write_artifact(args.out, doc)
+        print(f"\n# artifact: {path} ({doc['schema_version']}, "
+              f"{len(run_sweeps)} sweeps, cache={run_cache})")
 
     print("\n# ---- summary vs paper ----")
     for key, summary in summaries.items():
         print(f"# {key}: {summary}")
+    return doc
 
 
 if __name__ == "__main__":

@@ -5,39 +5,47 @@ at significantly high cost." This benchmark quantifies the trade the paper
 leads with: MASA on 8 banks x 8 subarrays (<0.15% die overhead) vs a
 subarray-oblivious baseline given 8/16/32/64 REAL banks (expensive).
 
-Traces are regenerated per bank count (the address space spreads across
-whatever banks exist); IPC gains are vs the 8-bank baseline.
+One grid over the n_banks axis; traces are regenerated per bank count by the
+sweep runner (the address space spreads across whatever banks exist). The
+``where`` filter prunes MASA to the 8-bank point — the only one the paper's
+comparison needs.
 """
 from __future__ import annotations
 
-import numpy as np
+from benchmarks.common import SEED, emit, mem_intensive, per_sim_cell_us, run_grid, timed
+from repro.core.dram import Policy
+from repro.experiments import SweepGrid
 
-from benchmarks.common import SEED, emit, timed
-from repro.core.dram import PAPER_WORKLOADS, Policy, SimConfig, generate_trace, simulate_batch
-
+BANK_COUNTS = (8, 16, 32, 64)
 N = 4000
-SUBSET = [p for p in PAPER_WORKLOADS if p.mpki >= 9.0]
+SUBSET = mem_intensive(9.0)
 
 
-def _mean_cycles(traces, policy, cfg):
-    res = simulate_batch(traces, policy, cfg)
-    return np.asarray(res.total_cycles, np.float64)
+def make_grid() -> SweepGrid:
+    return SweepGrid(
+        name="sens_banks",
+        workloads=SUBSET,
+        policies=(Policy.BASELINE, Policy.MASA),
+        n_requests=N,
+        seed=SEED,
+        config_axes={"n_banks": BANK_COUNTS},
+        where=lambda pol, ov: pol == Policy.BASELINE or ov.get("n_banks") == 8,
+    )
 
 
 def run() -> dict:
-    # reference: 8-bank subarray-oblivious baseline
-    t8 = [generate_trace(p, N, n_banks=8, seed=SEED) for p in SUBSET]
-    base8 = _mean_cycles(t8, Policy.BASELINE, SimConfig(n_banks=8))
+    (sweep, us) = timed(run_grid, make_grid())
+    per_cell = per_sim_cell_us(sweep, us)
 
+    base8 = sweep.metric("total_cycles", policy=Policy.BASELINE, n_banks=8)
     out = {}
-    for nb in (8, 16, 32, 64):
-        tn = [generate_trace(p, N, n_banks=nb, seed=SEED) for p in SUBSET]
-        (cyc, us) = timed(_mean_cycles, tn, Policy.BASELINE, SimConfig(n_banks=nb))
+    for nb in BANK_COUNTS:
+        cyc = sweep.metric("total_cycles", policy=Policy.BASELINE, n_banks=nb)
         g = float((base8 / cyc - 1).mean() * 100)
         out[f"baseline_{nb}banks"] = g
-        emit(f"sens_banks.baseline_{nb}banks", us / len(SUBSET), f"+{g:.1f}%")
+        emit(f"sens_banks.baseline_{nb}banks", per_cell, f"+{g:.1f}%")
 
-    masa = _mean_cycles(t8, Policy.MASA, SimConfig(n_banks=8))
+    masa = sweep.metric("total_cycles", policy=Policy.MASA, n_banks=8)
     g_masa = float((base8 / masa - 1).mean() * 100)
     out["masa_8banks_8subarrays"] = g_masa
     emit("sens_banks.MASA_8banksx8subarrays", 0.0,
@@ -47,7 +55,7 @@ def run() -> dict:
 
 def _closest(out: dict, g: float) -> int:
     best, bn = None, 8
-    for nb in (8, 16, 32, 64):
+    for nb in BANK_COUNTS:
         d = abs(out[f"baseline_{nb}banks"] - g)
         if best is None or d < best:
             best, bn = d, nb

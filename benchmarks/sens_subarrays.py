@@ -1,36 +1,46 @@
 """Paper Sec. 9.2 sensitivity: mechanism gains vs subarrays-per-bank (1..64).
 
 The paper shows gains grow with the number of subarrays exposed (their main
-results conservatively assume 8; real devices have ~64)."""
+results conservatively assume 8; real devices have ~64).
+
+Expressed as one declarative grid — (BASELINE, SALP-1, MASA) x workloads x
+n_subarrays — executed as one bucketed, vmapped sweep. The result cache
+guarantees the baseline is simulated exactly once per (workload, geometry)
+cell, not once per mechanism policy compared against it (the old hand-rolled
+loop recomputed it inside every ``gain`` call).
+"""
 from __future__ import annotations
 
-import numpy as np
-
-from benchmarks.common import SEED, emit, timed
-from repro.core.dram import PAPER_WORKLOADS, Policy, SimConfig, generate_trace, simulate_batch
+from benchmarks.common import SEED, emit, mem_intensive, per_sim_cell_us, run_grid, timed
+from repro.core.dram import Policy
+from repro.experiments import SweepGrid
 
 SUBARRAY_COUNTS = (1, 2, 4, 8, 16, 32, 64)
 N = 4000
-# memory-intensive subset (the regime where subarray count matters)
-SUBSET = [p for p in PAPER_WORKLOADS if p.mpki >= 9.0]
+SUBSET = mem_intensive(9.0)
+
+
+def make_grid() -> SweepGrid:
+    return SweepGrid(
+        name="sens_subarrays",
+        workloads=SUBSET,
+        policies=(Policy.BASELINE, Policy.SALP1, Policy.MASA),
+        n_requests=N,
+        seed=SEED,
+        config_axes={"n_subarrays": SUBARRAY_COUNTS},
+    )
 
 
 def run() -> dict:
+    (sweep, us) = timed(run_grid, make_grid())
+    per_cell = per_sim_cell_us(sweep, us)
+
     out = {}
     for ns in SUBARRAY_COUNTS:
-        traces = [generate_trace(p, N, n_subarrays=ns, seed=SEED) for p in SUBSET]
-        cfg = SimConfig(n_subarrays=ns)
-
-        def gain(pol):
-            rb = simulate_batch(traces, Policy.BASELINE, cfg)
-            rp = simulate_batch(traces, pol, cfg)
-            return float((np.asarray(rb.total_cycles, np.float64)
-                          / np.asarray(rp.total_cycles, np.float64) - 1).mean() * 100)
-
-        (g_masa, us) = timed(gain, Policy.MASA)
-        g_s1 = gain(Policy.SALP1)
+        g_s1 = float(sweep.speedup_pct(Policy.SALP1, n_subarrays=ns).mean())
+        g_masa = float(sweep.speedup_pct(Policy.MASA, n_subarrays=ns).mean())
         out[ns] = {"salp1": g_s1, "masa": g_masa}
-        emit(f"sens_subarrays.{ns}", us / len(SUBSET),
+        emit(f"sens_subarrays.{ns}", per_cell,
              f"salp1=+{g_s1:.1f}%;masa=+{g_masa:.1f}%")
 
     masas = [out[ns]["masa"] for ns in SUBARRAY_COUNTS]

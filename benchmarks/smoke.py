@@ -1,0 +1,50 @@
+"""CI smoke sweep: a tiny grid through the full experiments pipeline.
+
+Exercises grid expansion, shape bucketing, the result cache, and the batched
+engine on a CPU-sized problem (3 workloads x 3 policies x 2 geometries at 256
+requests), then sanity-checks the policy ladder so a silently-broken engine or
+sweep runner fails CI loudly.
+"""
+from __future__ import annotations
+
+from benchmarks.common import SEED, emit, per_sim_cell_us, run_grid, timed
+from repro.core.dram import PAPER_WORKLOADS, Policy
+from repro.experiments import SweepGrid
+
+N = 256
+SUBSET = tuple(p for p in PAPER_WORKLOADS if p.name in ("mcf", "lbm", "gups"))
+
+
+def make_grid() -> SweepGrid:
+    return SweepGrid(
+        name="smoke",
+        workloads=SUBSET,
+        policies=(Policy.BASELINE, Policy.SALP1, Policy.MASA),
+        n_requests=N,
+        seed=SEED,
+        config_axes={"n_subarrays": (4, 8)},
+    )
+
+
+def run() -> dict:
+    (sweep, us) = timed(run_grid, make_grid())
+    assert sweep.stats["n_cells"] == len(SUBSET) * 3 * 2
+    assert sweep.stats["sim_batches"] <= 6, sweep.stats   # 3 policies x 2 geometries
+
+    ok = True
+    for ns in (4, 8):
+        base = sweep.metric("total_cycles", policy=Policy.BASELINE, n_subarrays=ns)
+        s1 = sweep.metric("total_cycles", policy=Policy.SALP1, n_subarrays=ns)
+        if not (s1 <= base).all():
+            ok = False
+    g = float(sweep.speedup_pct(Policy.MASA, n_subarrays=8).mean())
+    emit("smoke.grid", per_sim_cell_us(sweep, us),
+         f"cells={sweep.stats['n_cells']};batches={sweep.stats['sim_batches']};"
+         f"ladder_ok={ok};masa=+{g:.1f}%")
+    if not ok:
+        raise AssertionError("policy ladder violated in smoke sweep")
+    return {"cells": sweep.stats["n_cells"], "masa_gain_pct": g, "ladder_ok": ok}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,39 +1,42 @@
 """End-to-end reproduction of the paper's headline results (Figures 4 & 5).
 
-  PYTHONPATH=src python examples/dram_paper_repro.py [--n 8000]
+  PYTHONPATH=src python examples/dram_paper_repro.py [--n 8000] [--out sweep.json]
 
-Runs the 32-workload suite under Baseline / SALP-1 / SALP-2 / MASA / Ideal and
-prints the mean IPC improvements, MASA's row-hit and dynamic-energy deltas,
-and the paper's attribution statistics, side by side with the published
-numbers.
+Declares the 32-workload x 5-policy evaluation as ONE experiment grid and runs
+it through the vectorized sweep subsystem (one vmapped, JIT-compiled simulator
+call per policy; every cell content-hash cached), then prints the mean IPC
+improvements, MASA's row-hit and dynamic-energy deltas, and the paper's
+attribution statistics, side by side with the published numbers.
 """
 import argparse
 
 import numpy as np
 
-from repro.core.dram import (PAPER_WORKLOADS, Policy, energy_from_result,
-                             generate_trace, simulate_batch)
-from repro.core.dram.timing import DEFAULT_CORE
+from repro.core.dram import PAPER_WORKLOADS, Policy
+from repro.experiments import SweepGrid, run_sweep, write_artifact
+
+POLICIES = (Policy.BASELINE, Policy.SALP1, Policy.SALP2, Policy.MASA,
+            Policy.IDEAL)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=8000)
     ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--out", type=str, default=None,
+                    help="optionally write the repro.sweep/v1 JSON artifact here")
     args = ap.parse_args()
 
-    traces = [generate_trace(p, args.n, seed=args.seed) for p in PAPER_WORKLOADS]
+    grid = SweepGrid(name="paper_repro", workloads=PAPER_WORKLOADS,
+                     policies=POLICIES, n_requests=args.n, seed=args.seed)
+    sweep = run_sweep(grid)
+    print(f"# {sweep.stats['n_cells']} cells in {sweep.stats['sim_batches']} "
+          f"vmapped calls ({sweep.stats['elapsed_s']}s)\n")
+
     mpki = np.array([p.mpki for p in PAPER_WORKLOADS])
-
-    ipc, res = {}, {}
-    for pol in (Policy.BASELINE, Policy.SALP1, Policy.SALP2, Policy.MASA,
-                Policy.IDEAL):
-        r = simulate_batch(traces, pol)
-        res[pol] = r
-        cyc = np.asarray(r.total_cycles, np.float64)
-        ipc[pol] = (args.n * 1000.0 / mpki) / (cyc * DEFAULT_CORE.cpu_per_dram)
-
+    ipc = {pol: sweep.metric("ipc", policy=pol) for pol in POLICIES}
     base = ipc[Policy.BASELINE]
+
     paper = {Policy.SALP1: 6.6, Policy.SALP2: 13.4, Policy.MASA: 16.7,
              Policy.IDEAL: 19.6}
     print(f"{'mechanism':12s} {'ours':>8s} {'paper':>8s}")
@@ -41,24 +44,27 @@ def main() -> None:
         g = 100 * (ipc[pol] / base - 1).mean()
         print(f"{pol.pretty:12s} {g:7.2f}% {ref:7.1f}%")
 
-    hit_b = np.asarray(res[Policy.BASELINE].n_hit) / args.n
-    hit_m = np.asarray(res[Policy.MASA].n_hit) / args.n
+    hit_b = sweep.metric("n_hit", policy=Policy.BASELINE) / args.n
+    hit_m = sweep.metric("n_hit", policy=Policy.MASA) / args.n
     print(f"\nrow-hit rate: {hit_b.mean():.3f} -> {hit_m.mean():.3f} "
           f"(+{100*(hit_m-hit_b).mean():.1f}pp; paper +12.8pp)")
 
-    eb = energy_from_result(res[Policy.BASELINE])["dynamic_nj"]
-    em = energy_from_result(res[Policy.MASA])["dynamic_nj"]
+    eb = sweep.metric("dynamic_nj", policy=Policy.BASELINE)
+    em = sweep.metric("dynamic_nj", policy=Policy.MASA)
     print(f"dynamic DRAM energy: -{100*(1-em/eb).mean():.1f}% (paper -18.6%)")
 
     g1 = 100 * (ipc[Policy.SALP1] / base - 1)
     print(f"\nSALP-1 >5% gainers mean MPKI: {mpki[g1 > 5].mean():.1f} vs "
           f"others {mpki[g1 <= 5].mean():.2f} (paper 18.4 vs 1.14)")
-    sasel = np.asarray(res[Policy.MASA].n_sasel, np.float64)
-    acts = np.asarray(res[Policy.MASA].n_act, np.float64)
+    sasel = sweep.metric("n_sasel", policy=Policy.MASA)
+    acts = sweep.metric("n_act", policy=Policy.MASA)
     gm = 100 * (ipc[Policy.MASA] / base - 1)
     hi = gm > 30
     print(f"MASA SA_SEL per ACT: high-benefit apps {np.mean(sasel[hi]/acts[hi]):.2f} "
           f"vs rest {np.mean(sasel[~hi]/acts[~hi]):.2f} (paper ~0.5 vs ~0.06)")
+
+    if args.out:
+        print(f"\nartifact: {write_artifact(args.out, sweep.to_json())}")
 
 
 if __name__ == "__main__":

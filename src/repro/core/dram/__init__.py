@@ -20,12 +20,13 @@ programs.
 from repro.core.dram.timing import DramTiming, EnergyModel, CoreModel, DDR3_1066, DEFAULT_ENERGY, DEFAULT_CORE
 from repro.core.dram.policies import Policy
 from repro.core.dram.trace import WorkloadProfile, generate_trace, PAPER_WORKLOADS, stack_traces
-from repro.core.dram.engine import simulate, simulate_batch, SimConfig, SimResult
+from repro.core.dram.engine import (simulate, simulate_batch, simulate_stacked,
+                                    SimConfig, SimResult)
 from repro.core.dram.metrics import ipc_from_result, energy_from_result, summarize
 
 __all__ = [
     "DramTiming", "EnergyModel", "CoreModel", "DDR3_1066", "DEFAULT_ENERGY", "DEFAULT_CORE",
     "Policy", "WorkloadProfile", "generate_trace", "PAPER_WORKLOADS", "stack_traces",
-    "simulate", "simulate_batch", "SimConfig", "SimResult",
+    "simulate", "simulate_batch", "simulate_stacked", "SimConfig", "SimResult",
     "ipc_from_result", "energy_from_result", "summarize",
 ]

@@ -348,22 +348,37 @@ def simulate(trace: Trace, policy: Policy, config: SimConfig = SimConfig()) -> S
         trace.mlp_window, closed_row=config.row_policy == "closed")
 
 
-def simulate_batch(traces: list[Trace], policy: Policy,
-                   config: SimConfig = SimConfig()) -> SimResult:
-    """vmap the simulator over a stack of equal-length traces."""
+def simulate_stacked(stacked: dict, policy: Policy,
+                     config: SimConfig = SimConfig()) -> SimResult:
+    """Batched entry point: vmap the simulator over pre-stacked [B, N] arrays.
+
+    ``stacked`` is the dict produced by :func:`repro.core.dram.trace.stack_traces`
+    (fields ``bank/subarray/row/is_write/gap/dep`` of shape [B, N] and
+    ``mlp_window`` of shape [B]). All B rows share one compiled program — this
+    is the primitive the experiment-sweep subsystem buckets cells onto.
+    """
     nb, ns = config.geometry_for(policy)
+    bank = jnp.asarray(stacked["bank"])
+    subarray = jnp.asarray(stacked["subarray"])
     if policy == Policy.IDEAL:
-        traces = [to_ideal(t, config.n_banks, config.n_subarrays) for t in traces]
+        # to_ideal() on stacked arrays: every subarray becomes a real bank
+        bank = bank * config.n_subarrays + subarray
+        subarray = jnp.zeros_like(subarray)
         eff_policy = Policy.BASELINE
     else:
         eff_policy = policy
-    stacked = stack_traces(traces)
     rmode = 0 if not config.refresh else (2 if config.dsarp else 1)
     fn = functools.partial(_simulate_arrays, int(eff_policy), nb, ns,
                            config.timing, rmode,
                            closed_row=config.row_policy == "closed")
     return jax.vmap(fn)(
-        jnp.asarray(stacked["bank"]), jnp.asarray(stacked["subarray"]),
+        bank, subarray,
         jnp.asarray(stacked["row"]), jnp.asarray(stacked["is_write"]),
         jnp.asarray(stacked["gap"]), jnp.asarray(stacked["dep"]),
         jnp.asarray(stacked["mlp_window"]))
+
+
+def simulate_batch(traces: list[Trace], policy: Policy,
+                   config: SimConfig = SimConfig()) -> SimResult:
+    """vmap the simulator over a stack of equal-length traces."""
+    return simulate_stacked(stack_traces(traces), policy, config)

@@ -131,17 +131,80 @@ class MulticoreResult:
         return float(np.sum(self.alone_cycles / np.maximum(self.core_cycles, 1)))
 
 
-def simulate_multicore(traces: list[Trace], policy: Policy,
-                       config: SimConfig = SimConfig(),
-                       use_ranking: bool = False) -> MulticoreResult:
-    nb, ns = config.geometry_for(policy)
-    eff = Policy.BASELINE if policy == Policy.IDEAL else policy
+def _prep_mix(traces: list[Trace], policy: Policy, config: SimConfig):
     work = [to_ideal(t, config.n_banks, config.n_subarrays) if policy == Policy.IDEAL else t
             for t in traces]
     st = stack_traces(work)
     # TCM-style ranking: lower MPKI -> higher priority (rank 0 first)
     mpkis = np.array([t.profile.mpki for t in traces])
     rank = np.argsort(np.argsort(mpkis)).astype(np.int32)
+    return st, rank
+
+
+def alone_baseline_cycles(mixes: list[list[Trace]],
+                          config: SimConfig = SimConfig()) -> np.ndarray:
+    """Per-trace run-alone BASELINE cycles for all mixes, one vmapped call.
+
+    Policy-independent (the alone reference is the baseline memory system for
+    every policy), so callers comparing several policies over the same mixes
+    should compute it once and pass it to ``simulate_multicore_batch``.
+    """
+    from repro.core.dram.engine import simulate_batch
+    flat = [t for m in mixes for t in m]
+    return np.asarray(simulate_batch(flat, Policy.BASELINE, config).total_cycles,
+                      np.float64)
+
+
+def simulate_multicore_batch(mixes: list[list[Trace]], policy: Policy,
+                             config: SimConfig = SimConfig(),
+                             use_ranking: bool = False,
+                             alone_cycles: np.ndarray | None = None,
+                             ) -> list[MulticoreResult]:
+    """Batched entry point: vmap the shared-channel simulator over M mixes.
+
+    All mixes must have the same core count and trace length; they share one
+    compiled program ([M, C, N] stacked arrays) instead of M sequential scans.
+    ``alone_cycles`` (flat [sum_len(mixes)] array from
+    ``alone_baseline_cycles``) skips recomputing the policy-independent
+    run-alone references on every policy comparison.
+    """
+    nb, ns = config.geometry_for(policy)
+    eff = Policy.BASELINE if policy == Policy.IDEAL else policy
+    prepped = [_prep_mix(m, policy, config) for m in mixes]
+    stacked = {k: jnp.asarray(np.stack([st[k] for st, _ in prepped]))
+               for k in prepped[0][0]}
+    ranks = jnp.asarray(np.stack([r for _, r in prepped]))
+
+    fn = functools.partial(_simulate_multicore, int(eff), nb, ns,
+                           config.timing, use_ranking)
+    shared, core_cycles = jax.vmap(fn)(
+        stacked["bank"], stacked["subarray"], stacked["row"],
+        stacked["is_write"], stacked["gap"], stacked["dep"],
+        stacked["mlp_window"], ranks)
+
+    alone_all = (alone_cycles if alone_cycles is not None
+                 else alone_baseline_cycles(mixes, config))
+
+    out = []
+    pos = 0
+    for i, m in enumerate(mixes):
+        res_i = SimResult(**{f.name: np.asarray(getattr(shared, f.name))[i]
+                             for f in dataclasses.fields(SimResult)})
+        out.append(MulticoreResult(
+            shared=res_i,
+            core_cycles=np.asarray(core_cycles, np.float64)[i],
+            alone_cycles=alone_all[pos:pos + len(m)],
+            profiles=[t.profile for t in m]))
+        pos += len(m)
+    return out
+
+
+def simulate_multicore(traces: list[Trace], policy: Policy,
+                       config: SimConfig = SimConfig(),
+                       use_ranking: bool = False) -> MulticoreResult:
+    nb, ns = config.geometry_for(policy)
+    eff = Policy.BASELINE if policy == Policy.IDEAL else policy
+    st, rank = _prep_mix(traces, policy, config)
     shared, core_cycles = _simulate_multicore(
         int(eff), nb, ns, config.timing, use_ranking,
         jnp.asarray(st["bank"]), jnp.asarray(st["subarray"]), jnp.asarray(st["row"]),

@@ -1,0 +1,31 @@
+"""Vectorized experiment-sweep subsystem.
+
+Express a paper evaluation as a declarative grid (policies x workloads x
+``SimConfig`` axes) and execute it as batched, JIT-compiled computation with
+shape bucketing and a content-hashed result cache:
+
+    from repro.experiments import SweepGrid, run_sweep
+    from repro.core.dram import PAPER_WORKLOADS, Policy
+
+    sweep = run_sweep(SweepGrid(
+        name="sens_subarrays",
+        workloads=PAPER_WORKLOADS,
+        policies=(Policy.BASELINE, Policy.SALP1, Policy.MASA),
+        config_axes={"n_subarrays": (1, 8, 64)},
+    ))
+    sweep.speedup_pct(Policy.MASA, n_subarrays=8)   # [W] percent gains
+
+See ``docs/experiments.md`` for the grid API and artifact schema reference.
+"""
+from repro.experiments.grid import Cell, SweepGrid
+from repro.experiments.cache import ResultCache, GLOBAL_CACHE, cell_key
+from repro.experiments.runner import (CellResult, SweepResult, run_sweep,
+                                      trace_for, clear_trace_cache)
+from repro.experiments.artifact import (SWEEP_SCHEMA, BENCH_SCHEMA,
+                                        bench_artifact, write_artifact)
+
+__all__ = [
+    "Cell", "SweepGrid", "ResultCache", "GLOBAL_CACHE", "cell_key",
+    "CellResult", "SweepResult", "run_sweep", "trace_for", "clear_trace_cache",
+    "SWEEP_SCHEMA", "BENCH_SCHEMA", "bench_artifact", "write_artifact",
+]

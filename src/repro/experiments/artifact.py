@@ -1,0 +1,52 @@
+"""Versioned JSON artifacts for experiment sweeps.
+
+Two schemas, both carrying an explicit ``schema_version``:
+
+* ``repro.sweep/v1`` — one grid run (produced by ``SweepResult.to_json``):
+  ``{schema_version, grid, stats, cells[]}`` where every cell records its
+  workload, policy, config overrides, content-hash key, raw ``SimResult``
+  counters, and derived metrics (IPC, row-hit rate, energy, ...).
+* ``repro.bench/v1`` — one ``benchmarks.run`` invocation: a set of benchmark
+  summaries plus every sweep artifact the benchmarks produced, under a single
+  top-level document (see ``docs/experiments.md`` for the field reference).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Any
+
+SWEEP_SCHEMA = "repro.sweep/v1"
+BENCH_SCHEMA = "repro.bench/v1"
+
+
+def bench_artifact(results: dict[str, Any], sweeps: list[dict[str, Any]],
+                   argv: list[str] | None = None,
+                   cache_stats: dict[str, Any] | None = None) -> dict[str, Any]:
+    """Assemble the single top-level document ``benchmarks.run`` emits."""
+    return {
+        "schema_version": BENCH_SCHEMA,
+        "created_unix": time.time(),
+        "argv": argv or [],
+        "results": results,
+        "sweeps": sweeps,
+        "cache_stats": cache_stats or {},
+    }
+
+
+def write_artifact(path: str, doc: dict[str, Any]) -> str:
+    """Write an artifact document as JSON, creating parent dirs. Returns path."""
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=False, default=_default)
+    return path
+
+
+def _default(v: Any) -> Any:
+    try:
+        return float(v)
+    except (TypeError, ValueError):
+        return repr(v)

@@ -1,0 +1,72 @@
+"""Content-hashed result cache for the sweep runner.
+
+The cache key is a digest of everything that determines a simulation's output:
+the trace arrays themselves (not the generator parameters — anything producing
+bit-identical requests hits the same entry), the policy, and the full
+``SimConfig``. Values are plain dicts of python ints (the ``SimResult``
+counters), so entries are JSON-serializable and comparable bit-for-bit.
+
+The practical effect inside one process: the baseline is simulated exactly
+once per (workload, geometry) cell no matter how many mechanism policies are
+compared against it, and sweeps that share cells (fig4's 32x5 grid and fig5's
+32x2 grid, say) share their results.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Any
+
+import numpy as np
+
+from repro.core.dram.engine import SimConfig
+from repro.core.dram.policies import Policy
+from repro.core.dram.trace import Trace
+
+
+def cell_key(trace: Trace, policy: Policy, config: SimConfig) -> str:
+    """Content hash of one (trace, policy, config) simulation point."""
+    h = hashlib.sha256()
+    for arr in (trace.bank, trace.subarray, trace.row,
+                trace.is_write, trace.gap, trace.dep):
+        a = np.ascontiguousarray(arr)
+        h.update(str(a.dtype).encode())
+        h.update(a.tobytes())
+    h.update(repr((int(trace.mlp_window), int(policy),
+                   dataclasses.astuple(config))).encode())
+    return h.hexdigest()[:24]
+
+
+class ResultCache:
+    """In-memory {cell_key: counters-dict} store with hit/miss accounting."""
+
+    def __init__(self) -> None:
+        self._store: dict[str, dict[str, int]] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._store)
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._store
+
+    def get(self, key: str) -> dict[str, int] | None:
+        out = self._store.get(key)
+        if out is None:
+            self.misses += 1
+        else:
+            self.hits += 1
+        return out
+
+    def put(self, key: str, counters: dict[str, int]) -> None:
+        self._store[key] = counters
+
+    def stats(self) -> dict[str, Any]:
+        return {"entries": len(self._store), "hits": self.hits,
+                "misses": self.misses}
+
+
+#: Process-wide default cache: benchmarks run back-to-back by
+#: ``benchmarks.run`` share baselines through this instance.
+GLOBAL_CACHE = ResultCache()

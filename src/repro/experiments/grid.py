@@ -1,0 +1,123 @@
+"""Declarative experiment grids.
+
+A :class:`SweepGrid` names the full cross product the paper's evaluations are
+made of — policies x workloads x ``SimConfig`` axes — without saying anything
+about execution order, batching, or caching. The runner
+(:mod:`repro.experiments.runner`) expands the grid into :class:`Cell`s, groups
+cells that share static shapes into single vmapped simulator calls, and
+consults a content-hashed result cache so no (trace, policy, config) point is
+ever simulated twice.
+
+Two ways to span configurations:
+
+* ``config_axes={"n_subarrays": (1, 2, 4, 8)}`` — cartesian product over
+  ``SimConfig`` fields (the Sec. 9.2 sensitivity shape), and/or
+* ``configs=({}, {"refresh": True}, {"refresh": True, "dsarp": True})`` — an
+  explicit list of override dicts (the DSARP refresh-study shape).
+
+``where(policy, overrides) -> bool`` prunes cells that make no sense (e.g.
+DSARP under the baseline policy, which is defined to equal blocking refresh).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Callable, Mapping, Sequence
+
+from repro.core.dram.engine import SimConfig
+from repro.core.dram.policies import Policy
+from repro.core.dram.trace import WorkloadProfile
+
+DEFAULT_SEED = 7
+
+
+@dataclasses.dataclass(frozen=True)
+class Cell:
+    """One point of the grid: simulate `workload` under `policy` at `config`."""
+    workload: WorkloadProfile
+    policy: Policy
+    config: SimConfig
+    overrides: tuple[tuple[str, Any], ...]  # (field, value) pairs applied to base_config
+
+    @property
+    def override_dict(self) -> dict[str, Any]:
+        return dict(self.overrides)
+
+
+@dataclasses.dataclass
+class SweepGrid:
+    """Declarative description of one experiment sweep."""
+    name: str
+    workloads: Sequence[WorkloadProfile]
+    policies: Sequence[Policy]
+    n_requests: int = 4000
+    seed: int = DEFAULT_SEED
+    base_config: SimConfig = SimConfig()
+    config_axes: Mapping[str, Sequence[Any]] = dataclasses.field(default_factory=dict)
+    configs: Sequence[Mapping[str, Any]] | None = None
+    where: Callable[[Policy, dict[str, Any]], bool] | None = None
+
+    def __post_init__(self) -> None:
+        if self.configs is not None and self.config_axes:
+            raise ValueError("pass either config_axes (product) or configs "
+                             "(explicit list), not both")
+        for field in self.config_axes:
+            if not hasattr(self.base_config, field):
+                raise ValueError(f"unknown SimConfig field in config_axes: {field!r}")
+        for c in self.configs or ():
+            for field in c:
+                if not hasattr(self.base_config, field):
+                    raise ValueError(f"unknown SimConfig field in configs: {field!r}")
+
+    def config_points(self) -> list[dict[str, Any]]:
+        """The list of override dicts this grid spans (order is canonical)."""
+        if self.configs is not None:
+            return [dict(c) for c in self.configs]
+        if not self.config_axes:
+            return [{}]
+        keys = list(self.config_axes)
+        return [dict(zip(keys, vals))
+                for vals in itertools.product(*(self.config_axes[k] for k in keys))]
+
+    def expand(self) -> list[Cell]:
+        """Expand to cells in canonical order: config point, workload, policy."""
+        cells = []
+        for ov in self.config_points():
+            cfg = dataclasses.replace(self.base_config, **ov)
+            ov_t = tuple(sorted(ov.items()))
+            for w in self.workloads:
+                for pol in self.policies:
+                    if self.where is not None and not self.where(pol, dict(ov)):
+                        continue
+                    cells.append(Cell(workload=w, policy=pol, config=cfg,
+                                      overrides=ov_t))
+        return cells
+
+    def describe(self) -> dict[str, Any]:
+        """JSON-safe summary of the grid (embedded in sweep artifacts)."""
+        return {
+            "name": self.name,
+            "workloads": [w.name for w in self.workloads],
+            "policies": [p.name for p in self.policies],
+            "n_requests": self.n_requests,
+            "seed": self.seed,
+            "base_config": _json_safe(dataclasses.asdict(self.base_config)),
+            "config_axes": {k: [_json_safe(v) for v in vs]
+                            for k, vs in self.config_axes.items()},
+            "configs": ([{k: _json_safe(v) for k, v in c.items()}
+                         for c in self.configs]
+                        if self.configs is not None else None),
+            "n_cells": len(self.expand()),
+        }
+
+
+def _json_safe(v: Any) -> Any:
+    if dataclasses.is_dataclass(v) and not isinstance(v, type):
+        return _json_safe(dataclasses.asdict(v))
+    if isinstance(v, dict):
+        return {k: _json_safe(x) for k, x in v.items()}
+    if isinstance(v, (list, tuple)):
+        return [_json_safe(x) for x in v]
+    if isinstance(v, (str, int, float, bool)) or v is None:
+        return v
+    return repr(v)

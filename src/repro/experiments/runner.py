@@ -1,0 +1,229 @@
+"""Vectorized sweep execution.
+
+``run_sweep`` turns a :class:`~repro.experiments.grid.SweepGrid` into results
+via three mechanisms:
+
+1. **Trace memoization** — traces depend only on (workload, n_requests,
+   n_banks, n_subarrays, seed); cells that differ only in policy / refresh /
+   row-policy share one generated trace.
+2. **Content-hashed result cache** — every cell is keyed by
+   :func:`repro.experiments.cache.cell_key`; a hit skips simulation entirely.
+   The baseline is therefore simulated once per (workload, geometry) cell, not
+   once per mechanism policy compared against it.
+3. **Shape bucketing + vmap** — uncached cells are grouped by their static
+   compile signature (policy, geometry, timing, refresh mode, row policy,
+   trace length); each bucket becomes ONE batched, JIT-compiled
+   :func:`repro.core.dram.engine.simulate_stacked` call, vmapped over the
+   bucket's stacked traces. A 32-workload x 5-policy grid is 5 XLA programs,
+   not 160.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Iterable
+
+import numpy as np
+
+from repro.core.dram import engine
+from repro.core.dram.engine import SimConfig, SimResult
+from repro.core.dram.metrics import (avg_read_latency, energy_from_result,
+                                     ipc_from_result, row_hit_rate,
+                                     sasel_per_act)
+from repro.core.dram.policies import Policy
+from repro.core.dram.trace import Trace, WorkloadProfile, generate_trace, stack_traces
+from repro.experiments.cache import ResultCache, cell_key
+from repro.experiments.grid import Cell, SweepGrid, _json_safe
+
+_COUNTER_FIELDS = tuple(f.name for f in dataclasses.fields(SimResult))
+
+#: Test seam + single choke point: every simulation a sweep performs goes
+#: through this callable (monkeypatch it to count engine invocations).
+_SIMULATE = engine.simulate_stacked
+
+_TRACE_CACHE: dict[tuple, Trace] = {}
+
+
+def clear_trace_cache() -> None:
+    _TRACE_CACHE.clear()
+
+
+def trace_for(workload: WorkloadProfile, n_requests: int, config: SimConfig,
+              seed: int) -> Trace:
+    """Memoized trace generation; geometry is part of the trace's identity."""
+    key = (workload, n_requests, config.n_banks, config.n_subarrays, seed)
+    tr = _TRACE_CACHE.get(key)
+    if tr is None:
+        tr = generate_trace(workload, n_requests, n_banks=config.n_banks,
+                            n_subarrays=config.n_subarrays, seed=seed)
+        _TRACE_CACHE[key] = tr
+    return tr
+
+
+def _bucket_key(cell: Cell, n_requests: int) -> tuple:
+    """Static compile signature: cells sharing it can share one vmapped call.
+
+    Derived from the FULL config (like cell_key) so a future SimConfig field
+    swept via config_axes can never land two different configs in one bucket.
+    """
+    return (int(cell.policy), dataclasses.astuple(cell.config), n_requests)
+
+
+@dataclasses.dataclass
+class CellResult:
+    workload: WorkloadProfile
+    policy: Policy
+    config: SimConfig
+    overrides: dict[str, Any]
+    key: str
+    cache_hit: bool
+    counters: dict[str, int]
+
+    @property
+    def sim_result(self) -> SimResult:
+        return SimResult(**{f: np.asarray(v) for f, v in self.counters.items()})
+
+    @property
+    def derived(self) -> dict[str, float]:
+        res = self.sim_result
+        e = energy_from_result(res)
+        return {
+            "ipc": float(ipc_from_result(res, self.workload)),
+            "row_hit_rate": float(row_hit_rate(res)),
+            "avg_read_latency_cpu": float(avg_read_latency(res)),
+            "dynamic_nj": float(e["dynamic_nj"]),
+            "total_nj": float(e["total_nj"]),
+            "sasel_per_act": float(sasel_per_act(res)),
+        }
+
+    def to_json(self) -> dict[str, Any]:
+        return {
+            "workload": self.workload.name,
+            "policy": self.policy.name,
+            "overrides": {k: _json_safe(v) for k, v in self.overrides.items()},
+            "key": self.key,
+            "cache_hit": self.cache_hit,
+            "counters": self.counters,
+            "derived": self.derived,
+        }
+
+
+class SweepResult:
+    """Results of one grid run, with paper-metric accessors."""
+
+    def __init__(self, grid: SweepGrid, cells: list[CellResult],
+                 stats: dict[str, Any]) -> None:
+        self.grid = grid
+        self.cells = cells
+        self.stats = stats
+
+    def select(self, policy: Policy | None = None,
+               workload: str | None = None, **config_eq: Any) -> list[CellResult]:
+        """Cells matching a policy / workload-name / SimConfig field values."""
+        out = []
+        for c in self.cells:
+            if policy is not None and c.policy != policy:
+                continue
+            if workload is not None and c.workload.name != workload:
+                continue
+            if any(getattr(c.config, k) != v for k, v in config_eq.items()):
+                continue
+            out.append(c)
+        return out
+
+    def metric(self, name: str, policy: Policy | None = None,
+               **config_eq: Any) -> np.ndarray:
+        """[W]-vector of a counter or derived metric, in grid workload order."""
+        sel = self.select(policy=policy, **config_eq)
+        by_wl = {c.workload.name: c for c in sel}
+        if len(by_wl) != len(sel):
+            raise ValueError(
+                f"selection for metric {name!r} is ambiguous "
+                f"({len(sel)} cells, {len(by_wl)} workloads); add config filters")
+        vals = []
+        for w in self.grid.workloads:
+            c = by_wl.get(w.name)
+            if c is None:
+                raise ValueError(
+                    f"no cell for workload {w.name!r} matching policy={policy} "
+                    f"{config_eq} — was it pruned by the grid's where filter?")
+            vals.append(c.counters[name] if name in c.counters
+                        else c.derived[name])
+        return np.asarray(vals, np.float64)
+
+    def speedup_pct(self, policy: Policy, baseline: Policy = Policy.BASELINE,
+                    **config_eq: Any) -> np.ndarray:
+        """Per-workload cycle-time gain of `policy` over `baseline`, percent."""
+        base = self.metric("total_cycles", policy=baseline, **config_eq)
+        pol = self.metric("total_cycles", policy=policy, **config_eq)
+        return (base / pol - 1.0) * 100.0
+
+    def ipc_gain_pct(self, policy: Policy, baseline: Policy = Policy.BASELINE,
+                     **config_eq: Any) -> np.ndarray:
+        """Per-workload IPC gain of `policy` over `baseline`, percent."""
+        base = self.metric("ipc", policy=baseline, **config_eq)
+        pol = self.metric("ipc", policy=policy, **config_eq)
+        return (pol / base - 1.0) * 100.0
+
+    def to_json(self) -> dict[str, Any]:
+        return {
+            "schema_version": "repro.sweep/v1",
+            "grid": self.grid.describe(),
+            "stats": self.stats,
+            "cells": [c.to_json() for c in self.cells],
+        }
+
+
+def run_sweep(grid: SweepGrid, cache: ResultCache | None = None) -> SweepResult:
+    """Execute a grid: dedupe via cache, bucket by static shape, vmap, unpack."""
+    cache = cache if cache is not None else ResultCache()
+    t0 = time.perf_counter()
+    cells = grid.expand()
+
+    traces = [trace_for(c.workload, grid.n_requests, c.config, grid.seed)
+              for c in cells]
+    keys = [cell_key(tr, c.policy, c.config) for tr, c in zip(traces, cells)]
+
+    # Partition: cached / to-simulate (deduping repeated keys within the sweep).
+    counters_by_key: dict[str, dict[str, int]] = {}
+    hit_keys: set[str] = set()
+    pending: dict[tuple, list[int]] = {}   # bucket -> cell indices (first per key)
+    seen_pending: set[str] = set()
+    for i, (c, k) in enumerate(zip(cells, keys)):
+        if k in counters_by_key or k in seen_pending:
+            continue
+        got = cache.get(k)
+        if got is not None:
+            counters_by_key[k] = got
+            hit_keys.add(k)
+        else:
+            pending.setdefault(_bucket_key(c, grid.n_requests), []).append(i)
+            seen_pending.add(k)
+
+    # One batched simulator call per static-shape bucket.
+    n_batches = 0
+    for idxs in pending.values():
+        stacked = stack_traces([traces[i] for i in idxs])
+        res = _SIMULATE(stacked, cells[idxs[0]].policy, cells[idxs[0]].config)
+        n_batches += 1
+        unpacked = {f: np.asarray(getattr(res, f)) for f in _COUNTER_FIELDS}
+        for b, i in enumerate(idxs):
+            counters = {f: int(unpacked[f][b]) for f in _COUNTER_FIELDS}
+            counters_by_key[keys[i]] = counters
+            cache.put(keys[i], counters)
+
+    results = [
+        CellResult(workload=c.workload, policy=c.policy, config=c.config,
+                   overrides=c.override_dict, key=k, cache_hit=k in hit_keys,
+                   counters=counters_by_key[k])
+        for c, k in zip(cells, keys)
+    ]
+    stats = {
+        "n_cells": len(cells),
+        "n_unique": len(set(keys)),
+        "cache_hits": len(hit_keys),
+        "simulated_cells": sum(len(v) for v in pending.values()),
+        "sim_batches": n_batches,
+        "elapsed_s": round(time.perf_counter() - t0, 4),
+    }
+    return SweepResult(grid, results, stats)

@@ -1,6 +1,8 @@
 """Hypothesis property tests on the DRAM engine's invariants."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed; property tests skipped")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.dram import DDR3_1066, Policy, SimConfig, simulate

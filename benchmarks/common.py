@@ -38,6 +38,15 @@ def run_grid(grid):
     return sweep
 
 
+def run_mix_grid(grid):
+    """Run a MixGrid (multi-core policy x scheduler sweep), registering its
+    ``repro.sweep/v1`` artifact alongside the single-core sweeps."""
+    from repro.experiments import run_mix_sweep
+    sweep = run_mix_sweep(grid)
+    SWEEPS.append(sweep.to_json())
+    return sweep
+
+
 def per_sim_cell_us(sweep, us: float) -> float:
     """us per actually-simulated cell (cache hits cost ~nothing and would
     dilute the column into meaninglessness on warm caches)."""

@@ -10,9 +10,16 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import SEED, emit, timed
-from repro.core.dram import PAPER_WORKLOADS, Policy, generate_trace
+from repro.core.dram import (ROW_SPACE_STRIDE, Policy, Scheduler, SimConfig,
+                            generate_trace, workload)
 from repro.core.dram.multicore import (alone_baseline_cycles,
                                        simulate_multicore_batch)
+
+# The paper's multi-core evaluation runs the controller with FR-FCFS; TCM
+# ranking composes on top (benchmarks/sched_bench.py sweeps the full
+# policy x scheduler cross product through the grid API).
+FRFCFS = SimConfig(scheduler=Scheduler.FRFCFS)
+TCM = SimConfig(scheduler=Scheduler.TCM)
 
 N = 1500
 # Four 4-core mixes spanning intensity classes (paper-style random mixes).
@@ -22,11 +29,9 @@ MIXES = (
     ("stream_copy", "GemsFDTD", "leslie3d", "gcc"),
     ("libquantum", "zeusmp", "bwaves", "astar"),
 )
-_BY_NAME = {p.name: p for p in PAPER_WORKLOADS}
-
-
 def _mix_traces(names):
-    return [generate_trace(_BY_NAME[n], N, seed=SEED, row_space_offset=4096 * i)
+    return [generate_trace(workload(n), N, seed=SEED,
+                           row_space_offset=ROW_SPACE_STRIDE * i)
             for i, n in enumerate(names)]
 
 
@@ -36,20 +41,18 @@ def run() -> dict:
 
     alone = alone_baseline_cycles(mixes)   # policy-independent: compute once
     (base, us) = timed(simulate_multicore_batch, mixes, Policy.BASELINE,
-                       alone_cycles=alone)
+                       FRFCFS, alone_cycles=alone)
     ws0 = np.array([r.weighted_speedup for r in base])
     ws = {pol: np.array([r.weighted_speedup for r in
-                         simulate_multicore_batch(mixes, pol,
+                         simulate_multicore_batch(mixes, pol, FRFCFS,
                                                   alone_cycles=alone)])
           for pol in pols}
     ws_tcm_masa = np.array([r.weighted_speedup for r in
-                            simulate_multicore_batch(mixes, Policy.MASA,
-                                                     use_ranking=True,
+                            simulate_multicore_batch(mixes, Policy.MASA, TCM,
                                                      alone_cycles=alone)])
     ws_tcm_base = np.array([r.weighted_speedup for r in
                             simulate_multicore_batch(mixes, Policy.BASELINE,
-                                                     use_ranking=True,
-                                                     alone_cycles=alone)])
+                                                     TCM, alone_cycles=alone)])
 
     gains = {pol: 100 * (ws[pol] / ws0 - 1) for pol in pols}
     for i, mix in enumerate(MIXES):

@@ -47,6 +47,8 @@ REGISTRY: tuple[Bench, ...] = (
           "Sec. 6.1 extension: DSARP refresh parallelization (grid sweep)"),
     Bench("multicore", "benchmarks.multicore_bench", ("system",),
           "Sec. 4/9.3: multicore + TCM scheduling (batched mixes)"),
+    Bench("sched", "benchmarks.sched_bench", ("system", "sched"),
+          "Sec. 4/9.3: policy x scheduler x mix grid, refresh on"),
     Bench("kernels", "benchmarks.kernel_bench", ("accel",),
           "Layer B: Pallas kernel residency"),
     Bench("serving", "benchmarks.serving_bench", ("accel",),
@@ -130,10 +132,11 @@ def main(argv: list[str] | None = None) -> dict:
                  "misses": GLOBAL_CACHE.misses - misses0}
     doc = bench_artifact(results=summaries, sweeps=run_sweeps,
                          argv=list(argv) if argv is not None else sys.argv[1:],
-                         cache_stats=run_cache)
+                         cache_stats=run_cache, seed=common.SEED)
     if args.out:
         path = write_artifact(args.out, doc)
         print(f"\n# artifact: {path} ({doc['schema_version']}, "
+              f"sha={doc['git_sha'][:12]}, seed={doc['seed']}, "
               f"{len(run_sweeps)} sweeps, cache={run_cache})")
 
     print("\n# ---- summary vs paper ----")

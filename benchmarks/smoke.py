@@ -1,17 +1,20 @@
-"""CI smoke sweep: a tiny grid through the full experiments pipeline.
+"""CI smoke sweep: tiny grids through the full experiments pipeline.
 
 Exercises grid expansion, shape bucketing, the result cache, and the batched
 engine on a CPU-sized problem (3 workloads x 3 policies x 2 geometries at 256
 requests), then sanity-checks the policy ladder so a silently-broken engine or
-sweep runner fails CI loudly.
+sweep runner fails CI loudly. A second, even smaller MIX grid drives the
+multicore controller through policy x scheduler (with refresh on), so the
+scheduler layer and ``run_mix_sweep`` are covered by the same CI cell.
 """
 from __future__ import annotations
 
-from benchmarks.common import SEED, emit, per_sim_cell_us, run_grid, timed
-from repro.core.dram import PAPER_WORKLOADS, Policy
-from repro.experiments import SweepGrid
+from benchmarks.common import SEED, emit, per_sim_cell_us, run_grid, run_mix_grid, timed
+from repro.core.dram import PAPER_WORKLOADS, Policy, Scheduler, workload
+from repro.experiments import MixGrid, SweepGrid
 
 N = 256
+N_MIX = 128
 SUBSET = tuple(p for p in PAPER_WORKLOADS if p.name in ("mcf", "lbm", "gups"))
 
 
@@ -23,6 +26,19 @@ def make_grid() -> SweepGrid:
         n_requests=N,
         seed=SEED,
         config_axes={"n_subarrays": (4, 8)},
+    )
+
+
+def make_sched_grid() -> MixGrid:
+    return MixGrid(
+        name="smoke_sched",
+        mixes=[(workload("mcf"), workload("lbm")),
+               (workload("gups"), workload("stream_copy"))],
+        policies=(Policy.BASELINE, Policy.MASA),
+        n_requests=N_MIX,
+        seed=SEED,
+        configs=({"scheduler": Scheduler.FCFS, "refresh": True},
+                 {"scheduler": Scheduler.FRFCFS, "refresh": True}),
     )
 
 
@@ -43,7 +59,30 @@ def run() -> dict:
          f"ladder_ok={ok};masa=+{g:.1f}%")
     if not ok:
         raise AssertionError("policy ladder violated in smoke sweep")
-    return {"cells": sweep.stats["n_cells"], "masa_gain_pct": g, "ladder_ok": ok}
+
+    # scheduler x policy mix grid through the shared controller, refresh on
+    (mix_sweep, mus) = timed(run_mix_grid, make_sched_grid())
+    assert mix_sweep.stats["n_cells"] == 2 * 2 * 2   # mixes x policies x scheds
+    sched_ok = True
+    n_cores = mix_sweep.grid.n_cores
+    for cell in mix_sweep.cells:
+        # every request served exactly once, whatever the discipline — a
+        # starving/duplicating scheduler fails loudly here
+        n = n_cores * N_MIX
+        if (cell.counters["n_rd"] + cell.counters["n_wr"] != n
+                or cell.counters["n_act"] + cell.counters["n_hit"] != n):
+            sched_ok = False
+        # weighted speedup is bounded by the core count up to mechanism gains
+        if not (0.1 < cell.weighted_speedup < 2 * n_cores):
+            sched_ok = False
+    emit("smoke.sched", mus / max(mix_sweep.stats["n_cells"], 1),
+         f"cells={mix_sweep.stats['n_cells']};"
+         f"batches={mix_sweep.stats['sim_batches']};ok={sched_ok}")
+    if not sched_ok:
+        raise AssertionError(
+            "scheduler mix grid violated conservation or speedup bounds")
+    return {"cells": sweep.stats["n_cells"], "masa_gain_pct": g, "ladder_ok": ok,
+            "sched_cells": mix_sweep.stats["n_cells"], "sched_ok": sched_ok}
 
 
 if __name__ == "__main__":

@@ -14,8 +14,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.core.dram import (PAPER_WORKLOADS, Policy, generate_trace, simulate,
-                             summarize)
+from repro.core.dram import (PAPER_WORKLOADS, ROW_SPACE_STRIDE, Policy, Scheduler,
+                             SimConfig, generate_trace, simulate, summarize,
+                             workload)
+from repro.core.dram.multicore import simulate_multicore
 from repro.data.synth import make_batch
 from repro.kernels.moe_gemm.ops import capacity_block_eids, grouped_matmul
 from repro.kernels.moe_gemm.ref import grouped_matmul_ref
@@ -26,7 +28,7 @@ from repro.train.step import make_train_step
 
 def layer_a_dram():
     print("=== Layer A: SALP DRAM simulator (the paper's mechanisms) ===")
-    prof = next(p for p in PAPER_WORKLOADS if p.name == "lbm")
+    prof = workload("lbm")
     trace = generate_trace(prof, 4000, seed=7)
     base = None
     for pol in (Policy.BASELINE, Policy.SALP1, Policy.SALP2, Policy.MASA,
@@ -35,6 +37,18 @@ def layer_a_dram():
         base = base or s["ipc"]
         print(f"  {pol.pretty:10s} IPC={s['ipc']:.3f} (+{100*(s['ipc']/base-1):5.1f}%) "
               f"row-hit={s['row_hit_rate']:.2f} energy={s['dynamic_nj']:.0f}nJ")
+
+    # Multi-core: the SAME controller with 4 cores, scheduler from SimConfig
+    # (the paper's Sec. 4 combination: SALP x request scheduling, refresh on).
+    names = ("mcf", "lbm", "soplex", "sphinx3")
+    mix = [generate_trace(workload(n), 1000, seed=7,
+                          row_space_offset=ROW_SPACE_STRIDE * i)
+           for i, n in enumerate(names)]
+    print(f"  4-core mix {'+'.join(names)} (refresh on):")
+    for sched in (Scheduler.FCFS, Scheduler.FRFCFS, Scheduler.TCM):
+        cfg = SimConfig(scheduler=sched, refresh=True)
+        ws = simulate_multicore(mix, Policy.MASA, cfg).weighted_speedup
+        print(f"    MASA + {sched.pretty:12s} weighted speedup = {ws:.2f}")
 
 
 def layer_b_kernel():

@@ -16,17 +16,31 @@ Kim et al., "A Case for Exploiting Subarray-Level Parallelism (SALP) in DRAM"
 Everything is pure JAX (`jax.lax.scan`) and vectorizes with `jax.vmap` over
 workloads, so a full (32 workloads x 5 policies) sweep is a handful of XLA
 programs.
+
+The simulator is layered (see docs/architecture.md):
+
+  * ``engine.py``     — bank/subarray timing state machine (the device).
+  * ``controller.py`` — memory controller: per-core visibility, completion
+                        rings, request window, refresh bookkeeping; ONE scan
+                        step shared by single- and multi-core simulation.
+  * ``schedulers.py`` — pluggable request schedulers (``Scheduler``): FCFS,
+                        FR-FCFS, FR-FCFS+SALP-aware, TCM ranking.
 """
 from repro.core.dram.timing import DramTiming, EnergyModel, CoreModel, DDR3_1066, DEFAULT_ENERGY, DEFAULT_CORE
 from repro.core.dram.policies import Policy
-from repro.core.dram.trace import WorkloadProfile, generate_trace, PAPER_WORKLOADS, stack_traces
+from repro.core.dram.schedulers import Scheduler, ALL_SCHEDULERS
+from repro.core.dram.trace import (WorkloadProfile, generate_trace, PAPER_WORKLOADS,
+                                   WORKLOADS_BY_NAME, workload, stack_traces,
+                                   ROW_SPACE_STRIDE)
 from repro.core.dram.engine import (simulate, simulate_batch, simulate_stacked,
                                     SimConfig, SimResult)
 from repro.core.dram.metrics import ipc_from_result, energy_from_result, summarize
 
 __all__ = [
     "DramTiming", "EnergyModel", "CoreModel", "DDR3_1066", "DEFAULT_ENERGY", "DEFAULT_CORE",
-    "Policy", "WorkloadProfile", "generate_trace", "PAPER_WORKLOADS", "stack_traces",
+    "Policy", "Scheduler", "ALL_SCHEDULERS",
+    "WorkloadProfile", "generate_trace", "PAPER_WORKLOADS",
+    "WORKLOADS_BY_NAME", "workload", "stack_traces", "ROW_SPACE_STRIDE",
     "simulate", "simulate_batch", "simulate_stacked", "SimConfig", "SimResult",
     "ipc_from_result", "energy_from_result", "summarize",
 ]

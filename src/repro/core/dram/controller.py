@@ -1,0 +1,196 @@
+"""Unified memory-controller layer (layer 2 of 3).
+
+One `lax.scan` step = one served memory request, for any number of cores
+sharing one channel. The controller owns everything the bank/subarray timing
+machine (:mod:`engine`) does not:
+
+* **per-core visibility** — when each core's head request becomes visible to
+  the controller: compute-gap pacing, dependent-load serialization, and the
+  ROB/MSHR-bounded request window (request ``i`` waits for request
+  ``i - mlp_window``'s completion);
+* **completion rings** — one ``_RING``-deep ring of completion cycles per
+  core, read back by the visibility rules above (``validate_mlp_window``
+  guards the ``mlp_window < _RING`` invariant at every entry point);
+* **request scheduling** — every step the pluggable scheduler
+  (:mod:`schedulers`) keys the cores' live head requests and the controller
+  serves ``argmin``;
+* **refresh bookkeeping** — per-bank staggered tREFI deadlines; a due bank
+  delays the visibility of requests it blocks (all of them under blocking
+  refresh, only the refreshed subarray's under DSARP+MASA) and directs the
+  timing layer to close the refreshed row(s).
+
+``engine.simulate*`` instantiates this scan with one core;
+``multicore.simulate_multicore*`` with C cores — there is exactly one
+implementation of the shared-channel semantics.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dram import engine as _engine
+from repro.core.dram.policies import Policy
+from repro.core.dram.schedulers import request_key
+from repro.core.dram.timing import DramTiming
+
+_RING = _engine._RING
+_NEG = _engine._NEG
+
+
+def validate_mlp_window(mlp_window) -> None:
+    """Enforce the completion-ring invariant ``mlp_window < _RING``.
+
+    The ROB-limit rule reads the ring ``mlp_window`` entries back; a window
+    as large as the ring would read the slot the current request is about to
+    overwrite — silently corrupting completions (e.g. a ``CoreModel`` with
+    ``mshr >= 64``). Checked host-side at every ``simulate*`` entry.
+    """
+    mw = np.asarray(mlp_window)
+    if (mw >= _RING).any() or (mw < 1).any():
+        raise ValueError(
+            f"mlp_window must be in [1, {_RING - 1}] (completion ring holds "
+            f"{_RING} entries and request i waits on request i - mlp_window); "
+            f"got {np.unique(mw).tolist()}. Reduce CoreModel.mshr or enlarge "
+            f"engine._RING.")
+
+
+def _refresh_due0(nb: int, t_refi: int) -> jax.Array:
+    # stagger per-bank refresh deadlines (real controllers do) to avoid bursts
+    return (jnp.arange(nb, dtype=jnp.int32) * max(t_refi // max(nb, 1), 1)
+            + t_refi)
+
+
+@functools.partial(jax.jit, static_argnames=("policy", "scheduler", "n_banks",
+                                             "n_subarrays", "timing",
+                                             "refresh_mode", "closed_row"))
+def _simulate_controller(policy: int, scheduler: int, n_banks: int,
+                         n_subarrays: int, timing: DramTiming,
+                         refresh_mode: int,
+                         bank, subarray, row, is_write, gap, dep,  # [C, N]
+                         mlp_window, rank,                         # [C]
+                         closed_row: bool = False):
+    """Scan C*N controller steps; returns (SimResult, per-core max completion)."""
+    t = timing
+    C, N = bank.shape
+    is_masa = policy == Policy.MASA
+    cores = jnp.arange(C, dtype=jnp.int32)
+
+    state0 = dict(
+        bank=_engine._bank_state0(n_banks, n_subarrays),
+        ptr=jnp.zeros((C,), jnp.int32),
+        vis_prev=jnp.zeros((C,), jnp.int32),
+        comp_ring=jnp.zeros((C, _RING), jnp.int32),
+        core_max_comp=jnp.zeros((C,), jnp.int32),
+    )
+    if refresh_mode:
+        state0["next_ref_due"] = _refresh_due0(n_banks, t.t_refi)
+        # In-flight refresh burst per bank: [end cycle, refreshed subarray].
+        # Once a served request triggers a refresh and the deadline advances,
+        # later heads to that bank must still see the burst until it ends —
+        # other cores' heads (C > 1), and, under DSARP+MASA, even the same
+        # core's: a non-target-subarray request is not blocked, so vis_prev
+        # does not advance past ref_end and a later target-subarray request
+        # would otherwise read the subarray mid-burst. Under blocking refresh
+        # (mode 1) the single-core vis_prev chain does carry every later
+        # request past ref_end, so there this state never binds.
+        state0["ref_busy_until"] = jnp.zeros((n_banks,), jnp.int32)
+        state0["ref_busy_target"] = jnp.zeros((n_banks,), jnp.int32)
+
+    def step(state, _):
+        bank_st = state["bank"]
+        ptr = state["ptr"]
+        live = ptr < N
+        p = jnp.minimum(ptr, N - 1)
+
+        hb = bank[cores, p]
+        hs = subarray[cores, p]
+        hw = row[cores, p]
+        hgap = gap[cores, p]
+        hdep = dep[cores, p]
+
+        # ---- per-core visibility of the head request
+        comp_prev = state["comp_ring"][cores, (p - 1) % _RING]
+        rob_lim = jnp.where(p >= mlp_window,
+                            state["comp_ring"][cores, (p - mlp_window) % _RING], 0)
+        vis = jnp.maximum(state["vis_prev"] + hgap,
+                          jnp.maximum(jnp.where(hdep, comp_prev, 0), rob_lim))
+
+        # ---- refresh: a due bank delays the heads it blocks
+        if refresh_mode:
+            # a burst already started by an earlier step still blocks the bank
+            busy_end = state["ref_busy_until"][hb]
+            busy_blocks = (vis < busy_end) & (
+                jnp.bool_(refresh_mode == 1) | jnp.bool_(not is_masa)
+                | (hs == state["ref_busy_target"][hb]))
+            vis = jnp.where(busy_blocks, busy_end, vis)
+            due = state["next_ref_due"][hb]
+            ref_pending = vis >= due
+            ref_end = due + t.t_rfc
+            ref_target = (due // t.t_refi) % n_subarrays
+            blocks = ref_pending & (jnp.bool_(refresh_mode == 1)
+                                    | jnp.bool_(not is_masa)
+                                    | (hs == ref_target))
+            vis = jnp.where(blocks, jnp.maximum(vis, ref_end), vis)
+        else:
+            ref_pending = jnp.zeros((C,), jnp.bool_)
+            ref_target = jnp.zeros((C,), jnp.int32)
+
+        # ---- scheduler: key the live heads, serve the argmin
+        orow = bank_st["open_row"][hb, hs]
+        hit = orow == hw
+        sa_open = orow != _NEG
+        # A head is *pending* (actually queued at the controller) if it is
+        # visible by the time the shared data bus frees; priority tiers only
+        # reorder pending requests (see schedulers.request_key).
+        pending = vis <= bank_st["data_bus_free"]
+        key = request_key(scheduler, vis, hit, sa_open, rank, pending, C, live)
+        c = jnp.argmin(key).astype(jnp.int32)
+        pc = p[c]
+
+        req = dict(
+            bank=hb[c], subarray=hs[c], row=hw[c],
+            is_write=is_write[c, pc], vis=vis[c],
+            ref_pending=ref_pending[c], ref_target=ref_target[c],
+        )
+        new_bank, comp = _engine._timing_step(policy, t, refresh_mode,
+                                              bank_st, req,
+                                              closed_row=closed_row)
+
+        new = dict(state)
+        new["bank"] = new_bank
+        if refresh_mode:
+            new["next_ref_due"] = jnp.where(
+                ref_pending[c],
+                state["next_ref_due"].at[hb[c]].set(
+                    jnp.maximum(state["next_ref_due"][hb[c]] + t.t_refi,
+                                vis[c])),
+                state["next_ref_due"])
+            new["ref_busy_until"] = jnp.where(
+                ref_pending[c],
+                state["ref_busy_until"].at[hb[c]].set(ref_end[c]),
+                state["ref_busy_until"])
+            new["ref_busy_target"] = jnp.where(
+                ref_pending[c],
+                state["ref_busy_target"].at[hb[c]].set(ref_target[c]),
+                state["ref_busy_target"])
+        new["ptr"] = ptr.at[c].add(1)
+        new["vis_prev"] = state["vis_prev"].at[c].set(vis[c])
+        new["comp_ring"] = state["comp_ring"].at[c, pc % _RING].set(comp)
+        new["core_max_comp"] = state["core_max_comp"].at[c].set(
+            jnp.maximum(state["core_max_comp"][c], comp))
+        return new, None
+
+    final, _ = jax.lax.scan(step, state0, None, length=C * N)
+    d = final["bank"]
+    res = _engine.SimResult(
+        total_cycles=jnp.maximum(d["max_comp"], jnp.max(final["vis_prev"])),
+        n_requests=jnp.int32(C * N),
+        n_act=d["c_act"], n_pre=d["c_pre"], n_rd=d["c_rd"], n_wr=d["c_wr"],
+        n_sasel=d["c_sasel"], n_hit=d["c_hit"],
+        sum_latency=d["sum_lat"], n_reads=d["c_reads"],
+        sa_open_cycles=d["sa_open_cycles"],
+    )
+    return res, final["core_max_comp"]

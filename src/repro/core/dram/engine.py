@@ -1,12 +1,16 @@
-"""Command-granularity DRAM timing simulator in pure JAX.
+"""Bank/subarray DRAM timing state machine in pure JAX (layer 1 of 3).
 
-One `lax.scan` step serves one memory request: it computes the issue time of
-every DRAM command the request needs (PRE / ACT / SA_SEL / RD / WR) under the
-active policy's timing rules, updates per-bank / per-subarray timing state, and
-emits the request's completion time. Requests issue in program order (the
-analytic OoO core of `timing.CoreModel` paces them); completions are
-out-of-order exactly as far as the policy's overlap rules allow — which is the
-effect the paper measures.
+This module owns the *device*: given one already-scheduled request and the
+cycle at which the controller exposes it (``vis``), ``_timing_step`` computes
+the issue time of every DRAM command the request needs (PRE / ACT / SA_SEL /
+RD / WR) under the active policy's timing rules, updates per-bank /
+per-subarray timing state, and returns the request's completion time.
+
+Everything about *which* request is served next — per-core visibility,
+completion rings, request scheduling, refresh bookkeeping — lives one layer
+up in :mod:`repro.core.dram.controller`; the pluggable scheduling disciplines
+live in :mod:`repro.core.dram.schedulers`. The ``simulate*`` entry points
+here are thin single-core (1-core-mix) instantiations of the controller.
 
 Policy timing semantics (`t_*` are issue cycles; see timing.py for constants):
 
@@ -27,18 +31,18 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.dram.policies import Policy
+from repro.core.dram.schedulers import Scheduler
 from repro.core.dram.timing import DramTiming, DDR3_1066
 from repro.core.dram.trace import Trace, to_ideal, stack_traces
 
 _NEG = jnp.int32(-1)
-_RING = 64  # completion ring size; must exceed CoreModel.mshr
+_RING = 64  # completion ring size; controller.validate_mlp_window enforces
+            # mlp_window < _RING at every simulate* entry
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,6 +62,11 @@ class SimConfig:
     # after every access (no hits, but no conflict serialization either) —
     # MASA's locality benefit exists only under the open-row policy.
     row_policy: str = "open"
+    # Request scheduler (controller layer). With a single core every
+    # discipline degenerates to program order (there is only one head
+    # request), so the default is inert for `simulate`; in multicore it
+    # selects among the cores' head requests (paper Sec. 4 / 9.3).
+    scheduler: Scheduler = Scheduler.FCFS
 
     def geometry_for(self, policy: Policy) -> tuple[int, int]:
         """IDEAL turns every subarray into a real bank."""
@@ -65,7 +74,10 @@ class SimConfig:
             return self.n_banks * self.n_subarrays, 1
         return self.n_banks, self.n_subarrays
 
-
+    @property
+    def refresh_mode(self) -> int:
+        """0 = off; 1 = blocking all-bank refresh; 2 = DSARP subarray refresh."""
+        return 0 if not self.refresh else (2 if self.dsarp else 1)
 
 
 @jax.tree_util.register_dataclass
@@ -85,13 +97,10 @@ class SimResult:
     sa_open_cycles: jax.Array   # integral of (active subarrays - 1)+ over time (MASA static power)
 
 
-def _state0(nb: int, ns: int, t_refi: int = 0):
+def _bank_state0(nb: int, ns: int) -> dict:
+    """Initial bank/subarray timing state (no request-visibility fields)."""
     z = jnp.zeros((nb, ns), jnp.int32)
-    # stagger per-bank refresh deadlines (real controllers do) to avoid bursts
-    ref_due = (jnp.arange(nb, dtype=jnp.int32) * max(t_refi // max(nb, 1), 1)
-               + t_refi) if t_refi else jnp.zeros((nb,), jnp.int32)
     return dict(
-        next_ref_due=ref_due,
         open_row=jnp.full((nb, ns), _NEG, jnp.int32),
         act_done=z, ras_done=z, wrr_done=z, pre_done=z,
         designated=jnp.full((nb,), _NEG, jnp.int32),
@@ -102,8 +111,6 @@ def _state0(nb: int, ns: int, t_refi: int = 0):
         col_last_wr=jnp.bool_(False),
         wr_data_end=jnp.int32(0),
         data_bus_free=jnp.int32(0),
-        vis_prev=jnp.int32(0),
-        comp_ring=jnp.zeros((_RING,), jnp.int32),
         last_open_time=jnp.int32(0),              # for sa_open_cycles integral
         open_count=jnp.int32(0),                  # currently activated subarrays
         # counters
@@ -115,37 +122,22 @@ def _state0(nb: int, ns: int, t_refi: int = 0):
     )
 
 
-def _step(policy: int, t: DramTiming, refresh_mode: int,
-          state: dict, req: dict, closed_row: bool = False) -> tuple[dict, None]:
-    """refresh_mode: 0 = off; 1 = blocking all-bank refresh (baseline DRAM);
-    2 = DSARP-style subarray refresh (paper Sec. 6.1): the tRFC burst occupies
-    one round-robin subarray; under MASA, requests to the bank's OTHER
-    subarrays proceed in parallel."""
+def _timing_step(policy: int, t: DramTiming, refresh_mode: int,
+                 state: dict, req: dict,
+                 closed_row: bool = False) -> tuple[dict, jax.Array]:
+    """Serve one scheduled request against the bank state; return completion.
+
+    ``req`` carries the request fields (``bank/subarray/row/is_write``), the
+    controller-computed visibility cycle ``vis`` (gap / dependence / ROB /
+    refresh blocking already folded in), and — when ``refresh_mode`` — the
+    controller's refresh directive for the target bank (``ref_pending``,
+    ``ref_target``: close the refreshed row(s) this step). ``refresh_mode``:
+    0 = off; 1 = blocking all-bank refresh (baseline DRAM); 2 = DSARP-style
+    subarray refresh (paper Sec. 6.1)."""
     b, s, w = req["bank"], req["subarray"], req["row"]
-    is_wr, gap, dep = req["is_write"], req["gap"], req["dep"]
-    j, mlp_w = req["idx"], req["mlp_window"]
+    is_wr, vis = req["is_write"], req["vis"]
 
     is_masa = policy == Policy.MASA
-
-    # ---- core model: when does this request become visible to the controller?
-    comp_prev = state["comp_ring"][(j - 1) % _RING]
-    rob_lim = jnp.where(j >= mlp_w, state["comp_ring"][(j - mlp_w) % _RING], 0)
-    vis = jnp.maximum(state["vis_prev"] + gap,
-                      jnp.maximum(jnp.where(dep, comp_prev, 0), rob_lim))
-
-    # ---- refresh (optional)
-    ref_pending = jnp.bool_(False)
-    ref_target = jnp.int32(0)
-    if refresh_mode:
-        ns = state["open_row"].shape[1]
-        due = state["next_ref_due"][b]
-        ref_pending = vis >= due
-        ref_end = due + t.t_rfc
-        ref_target = (due // t.t_refi) % ns
-        blocks_me = ref_pending & (jnp.bool_(refresh_mode == 1)
-                                   | jnp.bool_(not is_masa)
-                                   | (s == ref_target))
-        vis = jnp.where(blocks_me, jnp.maximum(vis, ref_end), vis)
 
     orow = state["open_row"][b, s]
     os_ = state["open_sa"][b]
@@ -250,9 +242,17 @@ def _step(policy: int, t: DramTiming, refresh_mode: int,
     new["open_sa"] = state["open_sa"].at[b].set(jnp.where(jnp.bool_(not is_masa), s, state["open_sa"][b]))
     new["designated"] = state["designated"].at[b].set(s)
 
+    new["col_last"] = t_col
+    new["col_last_wr"] = is_wr
+    new["wr_data_end"] = jnp.where(is_wr, data_end, state["wr_data_end"])
+    new["data_bus_free"] = data_end
+
     if refresh_mode:
         # refresh requires a precharged target: all-bank refresh closes every
-        # row in the bank; DSARP closes only the refreshed subarray
+        # row in the bank; DSARP closes only the refreshed subarray. The
+        # due-cycle bookkeeping lives in the controller; this layer only
+        # applies the row closure it directs.
+        ref_pending, ref_target = req["ref_pending"], req["ref_target"]
         if refresh_mode == 1:
             new["open_row"] = jnp.where(
                 ref_pending, new["open_row"].at[b, :].set(_NEG), new["open_row"])
@@ -260,19 +260,6 @@ def _step(policy: int, t: DramTiming, refresh_mode: int,
             new["open_row"] = jnp.where(
                 ref_pending, new["open_row"].at[b, ref_target].set(_NEG),
                 new["open_row"])
-        new["next_ref_due"] = jnp.where(
-            ref_pending,
-            state["next_ref_due"].at[b].set(
-                jnp.maximum(state["next_ref_due"][b] + t.t_refi, vis)),
-            state["next_ref_due"])
-
-    new["col_last"] = t_col
-    new["col_last_wr"] = is_wr
-    new["wr_data_end"] = jnp.where(is_wr, data_end, state["wr_data_end"])
-    new["data_bus_free"] = data_end
-    new["vis_prev"] = vis
-    new["comp_ring"] = state["comp_ring"].at[j % _RING].set(comp)
-    new["max_comp"] = jnp.maximum(state["max_comp"], comp)
 
     if closed_row:
         # Auto-precharge after every access. The auto-PRE occupies the bank's
@@ -294,6 +281,7 @@ def _step(policy: int, t: DramTiming, refresh_mode: int,
         new["open_sa"] = new["open_sa"].at[b].set(_NEG)
         new["open_count"] = new["open_count"] - jnp.where(act_needed, 1, 0)
 
+    new["max_comp"] = jnp.maximum(state["max_comp"], comp)
     new["c_act"] = state["c_act"] + act_needed
     new["c_pre"] = state["c_pre"] + pre_other_needed + pre_own_needed
     new["c_rd"] = state["c_rd"] + ~is_wr
@@ -302,50 +290,32 @@ def _step(policy: int, t: DramTiming, refresh_mode: int,
     new["c_hit"] = state["c_hit"] + hit
     new["sum_lat"] = state["sum_lat"] + jnp.where(is_wr, 0, comp - vis)
     new["c_reads"] = state["c_reads"] + ~is_wr
-    return new, None
+    return new, comp
 
 
-@functools.partial(jax.jit, static_argnames=("policy", "n_banks", "n_subarrays",
-                                              "timing", "refresh_mode", "closed_row"))
-def _simulate_arrays(policy: int, n_banks: int, n_subarrays: int, timing: DramTiming,
-                     refresh_mode: int,
-                     bank, subarray, row, is_write, gap, dep, mlp_window,
-                     closed_row: bool = False) -> SimResult:
-    n = bank.shape[0]
-    reqs = dict(
-        bank=bank.astype(jnp.int32), subarray=subarray.astype(jnp.int32),
-        row=row.astype(jnp.int32), is_write=is_write.astype(jnp.bool_),
-        gap=gap.astype(jnp.int32), dep=dep.astype(jnp.bool_),
-        idx=jnp.arange(n, dtype=jnp.int32),
-        mlp_window=jnp.broadcast_to(jnp.asarray(mlp_window, jnp.int32), (n,)),
-    )
-    step = functools.partial(_step, policy, timing, refresh_mode,
-                             closed_row=closed_row)
-    final, _ = jax.lax.scan(
-        step, _state0(n_banks, n_subarrays,
-                      timing.t_refi if refresh_mode else 0), reqs)
-    total = jnp.maximum(final["max_comp"], final["vis_prev"])
-    return SimResult(
-        total_cycles=total, n_requests=jnp.int32(n),
-        n_act=final["c_act"], n_pre=final["c_pre"],
-        n_rd=final["c_rd"], n_wr=final["c_wr"],
-        n_sasel=final["c_sasel"], n_hit=final["c_hit"],
-        sum_latency=final["sum_lat"], n_reads=final["c_reads"],
-        sa_open_cycles=final["sa_open_cycles"],
-    )
+def _controller_args(policy: Policy, config: SimConfig):
+    """Resolve (effective policy, geometry, static kwargs) for the controller."""
+    nb, ns = config.geometry_for(policy)
+    eff = Policy.BASELINE if policy == Policy.IDEAL else policy
+    return int(eff), int(Scheduler(config.scheduler)), nb, ns
 
 
 def simulate(trace: Trace, policy: Policy, config: SimConfig = SimConfig()) -> SimResult:
-    """Simulate one trace under one policy."""
-    nb, ns = config.geometry_for(policy)
+    """Simulate one trace under one policy (a 1-core controller instance)."""
+    from repro.core.dram import controller  # deferred: controller builds on this layer
+
+    controller.validate_mlp_window(trace.mlp_window)
+    eff, sched, nb, ns = _controller_args(policy, config)
     tr = to_ideal(trace, config.n_banks, config.n_subarrays) if policy == Policy.IDEAL else trace
-    eff_policy = Policy.BASELINE if policy == Policy.IDEAL else policy
-    rmode = 0 if not config.refresh else (2 if config.dsarp else 1)
-    return _simulate_arrays(
-        int(eff_policy), nb, ns, config.timing, rmode,
-        jnp.asarray(tr.bank), jnp.asarray(tr.subarray), jnp.asarray(tr.row),
-        jnp.asarray(tr.is_write), jnp.asarray(tr.gap), jnp.asarray(tr.dep),
-        trace.mlp_window, closed_row=config.row_policy == "closed")
+    res, _ = controller._simulate_controller(
+        eff, sched, nb, ns, config.timing, config.refresh_mode,
+        jnp.asarray(tr.bank)[None], jnp.asarray(tr.subarray)[None],
+        jnp.asarray(tr.row)[None], jnp.asarray(tr.is_write)[None],
+        jnp.asarray(tr.gap)[None], jnp.asarray(tr.dep)[None],
+        jnp.asarray([trace.mlp_window], jnp.int32),
+        jnp.zeros((1,), jnp.int32),
+        closed_row=config.row_policy == "closed")
+    return res
 
 
 def simulate_stacked(stacked: dict, policy: Policy,
@@ -355,23 +325,29 @@ def simulate_stacked(stacked: dict, policy: Policy,
     ``stacked`` is the dict produced by :func:`repro.core.dram.trace.stack_traces`
     (fields ``bank/subarray/row/is_write/gap/dep`` of shape [B, N] and
     ``mlp_window`` of shape [B]). All B rows share one compiled program — this
-    is the primitive the experiment-sweep subsystem buckets cells onto.
+    is the primitive the experiment-sweep subsystem buckets cells onto. Each
+    row is one single-core controller instance.
     """
-    nb, ns = config.geometry_for(policy)
+    from repro.core.dram import controller
+
+    controller.validate_mlp_window(stacked["mlp_window"])
+    eff, sched, nb, ns = _controller_args(policy, config)
     bank = jnp.asarray(stacked["bank"])
     subarray = jnp.asarray(stacked["subarray"])
     if policy == Policy.IDEAL:
         # to_ideal() on stacked arrays: every subarray becomes a real bank
         bank = bank * config.n_subarrays + subarray
         subarray = jnp.zeros_like(subarray)
-        eff_policy = Policy.BASELINE
-    else:
-        eff_policy = policy
-    rmode = 0 if not config.refresh else (2 if config.dsarp else 1)
-    fn = functools.partial(_simulate_arrays, int(eff_policy), nb, ns,
-                           config.timing, rmode,
+    fn = functools.partial(controller._simulate_controller, eff, sched, nb, ns,
+                           config.timing, config.refresh_mode,
                            closed_row=config.row_policy == "closed")
-    return jax.vmap(fn)(
+
+    def one(b, s, r, w, g, d, m):
+        res, _ = fn(b[None], s[None], r[None], w[None], g[None], d[None],
+                    m[None].astype(jnp.int32), jnp.zeros((1,), jnp.int32))
+        return res
+
+    return jax.vmap(one)(
         bank, subarray,
         jnp.asarray(stacked["row"]), jnp.asarray(stacked["is_write"]),
         jnp.asarray(stacked["gap"]), jnp.asarray(stacked["dep"]),

@@ -1,11 +1,13 @@
 """Multi-core shared-channel simulation (paper Sec. 4 / Sec. 9.3 of [66]).
 
-``n_cores`` request streams share one channel's banks. Each core issues its own
-requests in program order (same analytic OoO core as the single-core engine);
-the memory controller picks among the cores' head requests with FR-FCFS
-(row-hits first, then oldest), optionally composed with an application-aware
-thread ranking (TCM-style: latency-sensitive/low-MPKI cores prioritized), which
-is the scheduler combination the paper evaluates on top of SALP.
+``n_cores`` request streams share one channel's banks. Each core issues its
+own requests in program order (same analytic OoO core as the single-core
+engine); the memory controller (:mod:`repro.core.dram.controller` — the SAME
+scan step ``simulate`` instantiates with one core) picks among the cores' head
+requests with the configured scheduler (``SimConfig.scheduler``): FCFS,
+FR-FCFS, FR-FCFS+SALP-aware, or TCM-style application-aware ranking — the
+scheduler combinations the paper evaluates on top of SALP. Refresh/DSARP and
+the closed-row policy apply here exactly as in single-core, via ``SimConfig``.
 
 Metrics: weighted speedup = sum_i IPC_shared(i) / IPC_alone(i).
 """
@@ -18,99 +20,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.dram.engine import SimConfig, SimResult, _state0, _step, _RING, simulate
+from repro.core.dram import controller
+from repro.core.dram.engine import SimConfig, SimResult, _controller_args
 from repro.core.dram.policies import Policy
+from repro.core.dram.schedulers import Scheduler
 from repro.core.dram.trace import Trace, WorkloadProfile, to_ideal, stack_traces
-from repro.core.dram.metrics import ipc_from_result
-
-_BIG = jnp.int32(1 << 28)
-
-
-@functools.partial(jax.jit, static_argnames=("policy", "n_banks", "n_subarrays", "timing", "use_ranking"))
-def _simulate_multicore(policy: int, n_banks: int, n_subarrays: int, timing,
-                        use_ranking: bool,
-                        bank, subarray, row, is_write, gap, dep,  # [C, N]
-                        mlp_window, rank):                        # [C]
-    C, N = bank.shape
-    dram0 = _state0(n_banks, n_subarrays)
-
-    state0 = dict(
-        dram=dram0,
-        ptr=jnp.zeros((C,), jnp.int32),
-        vis_prev=jnp.zeros((C,), jnp.int32),
-        comp_ring=jnp.zeros((C, _RING), jnp.int32),
-        core_max_comp=jnp.zeros((C,), jnp.int32),
-    )
-
-    cores = jnp.arange(C, dtype=jnp.int32)
-
-    def step(state, _):
-        ptr = state["ptr"]
-        live = ptr < N
-        p = jnp.minimum(ptr, N - 1)
-
-        hb = bank[cores, p]
-        hs = subarray[cores, p]
-        hw = row[cores, p]
-        hgap = gap[cores, p]
-        hdep = dep[cores, p]
-
-        # per-core visibility of its head request
-        comp_prev = state["comp_ring"][cores, (p - 1) % _RING]
-        rob_lim = jnp.where(p >= mlp_window,
-                            state["comp_ring"][cores, (p - mlp_window) % _RING], 0)
-        vis = jnp.maximum(state["vis_prev"] + hgap,
-                          jnp.maximum(jnp.where(hdep, comp_prev, 0), rob_lim))
-
-        # FR-FCFS (+ optional TCM rank) selection among live heads
-        hit = state["dram"]["open_row"][hb, hs] == hw
-        key = vis + jnp.where(hit, 0, _BIG)
-        if use_ranking:
-            # TCM-style: the latency-sensitive (low-MPKI) half of the cores is
-            # strictly prioritized over the bandwidth-sensitive half.
-            latency_sensitive = rank < (C // 2)
-            key = key - jnp.where(latency_sensitive, 2 * _BIG, 0)
-        key = jnp.where(live, key, jnp.int32(2_000_000_000))
-        c = jnp.argmin(key).astype(jnp.int32)
-
-        # Serve core c's head request through the single-channel DRAM model.
-        # vis already folds in gap / dep / ROB constraints, so neutralize those
-        # fields to avoid double counting inside _step.
-        req = dict(
-            bank=hb[c], subarray=hs[c], row=hw[c],
-            is_write=is_write[c, p[c]], gap=jnp.int32(0), dep=jnp.bool_(False),
-            idx=p[c], mlp_window=mlp_window[c],
-        )
-        dram = dict(state["dram"])
-        dram["vis_prev"] = vis[c]
-        dram["comp_ring"] = state["comp_ring"][c]
-        new_dram, _ = _step(policy, timing, 0, dram, req)
-
-        comp = new_dram["comp_ring"][p[c] % _RING]
-        new = dict(
-            dram=new_dram,
-            ptr=state["ptr"].at[c].add(1),
-            vis_prev=state["vis_prev"].at[c].set(vis[c]),
-            comp_ring=state["comp_ring"].at[c].set(new_dram["comp_ring"]),
-            core_max_comp=state["core_max_comp"].at[c].set(
-                jnp.maximum(state["core_max_comp"][c], comp)),
-        )
-        # the shared DRAM state must not carry one core's ring/vis into another's
-        new["dram"]["comp_ring"] = dram0["comp_ring"]
-        new["dram"]["vis_prev"] = jnp.int32(0)
-        return new, None
-
-    final, _ = jax.lax.scan(step, state0, None, length=C * N)
-    d = final["dram"]
-    res = SimResult(
-        total_cycles=jnp.maximum(d["max_comp"], jnp.max(final["vis_prev"])),
-        n_requests=jnp.int32(C * N),
-        n_act=d["c_act"], n_pre=d["c_pre"], n_rd=d["c_rd"], n_wr=d["c_wr"],
-        n_sasel=d["c_sasel"], n_hit=d["c_hit"],
-        sum_latency=d["sum_lat"], n_reads=d["c_reads"],
-        sa_open_cycles=d["sa_open_cycles"],
-    )
-    return res, final["core_max_comp"]
 
 
 @dataclasses.dataclass
@@ -141,17 +55,27 @@ def _prep_mix(traces: list[Trace], policy: Policy, config: SimConfig):
     return st, rank
 
 
+def _scheduler_for(config: SimConfig, use_ranking: bool) -> SimConfig:
+    """Fold the deprecated ``use_ranking`` flag into ``config.scheduler``."""
+    if use_ranking:
+        return dataclasses.replace(config, scheduler=Scheduler.TCM)
+    return config
+
+
 def alone_baseline_cycles(mixes: list[list[Trace]],
                           config: SimConfig = SimConfig()) -> np.ndarray:
     """Per-trace run-alone BASELINE cycles for all mixes, one vmapped call.
 
     Policy-independent (the alone reference is the baseline memory system for
     every policy), so callers comparing several policies over the same mixes
-    should compute it once and pass it to ``simulate_multicore_batch``.
+    should compute it once and pass it to ``simulate_multicore_batch``. The
+    scheduler is normalized to FCFS — with a single stream it is inert, and
+    normalizing avoids one redundant XLA compile per scheduler value.
     """
     from repro.core.dram.engine import simulate_batch
+    cfg = dataclasses.replace(config, scheduler=Scheduler.FCFS)
     flat = [t for m in mixes for t in m]
-    return np.asarray(simulate_batch(flat, Policy.BASELINE, config).total_cycles,
+    return np.asarray(simulate_batch(flat, Policy.BASELINE, cfg).total_cycles,
                       np.float64)
 
 
@@ -160,23 +84,24 @@ def simulate_multicore_batch(mixes: list[list[Trace]], policy: Policy,
                              use_ranking: bool = False,
                              alone_cycles: np.ndarray | None = None,
                              ) -> list[MulticoreResult]:
-    """Batched entry point: vmap the shared-channel simulator over M mixes.
+    """Batched entry point: vmap the shared-channel controller over M mixes.
 
     All mixes must have the same core count and trace length; they share one
     compiled program ([M, C, N] stacked arrays) instead of M sequential scans.
     ``alone_cycles`` (flat [sum_len(mixes)] array from
     ``alone_baseline_cycles``) skips recomputing the policy-independent
-    run-alone references on every policy comparison.
+    run-alone references on every policy comparison. ``use_ranking=True`` is a
+    deprecated alias for ``config.scheduler = Scheduler.TCM``.
     """
-    nb, ns = config.geometry_for(policy)
-    eff = Policy.BASELINE if policy == Policy.IDEAL else policy
+    config = _scheduler_for(config, use_ranking)
+    eff, sched, nb, ns = _controller_args(policy, config)
     prepped = [_prep_mix(m, policy, config) for m in mixes]
     stacked = {k: jnp.asarray(np.stack([st[k] for st, _ in prepped]))
                for k in prepped[0][0]}
     ranks = jnp.asarray(np.stack([r for _, r in prepped]))
+    controller.validate_mlp_window(stacked["mlp_window"])
 
-    fn = functools.partial(_simulate_multicore, int(eff), nb, ns,
-                           config.timing, use_ranking)
+    fn = _controller_fn(eff, sched, nb, ns, config)
     shared, core_cycles = jax.vmap(fn)(
         stacked["bank"], stacked["subarray"], stacked["row"],
         stacked["is_write"], stacked["gap"], stacked["dep"],
@@ -199,19 +124,27 @@ def simulate_multicore_batch(mixes: list[list[Trace]], policy: Policy,
     return out
 
 
+def _controller_fn(eff: int, sched: int, nb: int, ns: int,
+                   config: SimConfig):
+    return functools.partial(
+        controller._simulate_controller, eff, sched, nb, ns,
+        config.timing, config.refresh_mode,
+        closed_row=config.row_policy == "closed")
+
+
 def simulate_multicore(traces: list[Trace], policy: Policy,
                        config: SimConfig = SimConfig(),
                        use_ranking: bool = False) -> MulticoreResult:
-    nb, ns = config.geometry_for(policy)
-    eff = Policy.BASELINE if policy == Policy.IDEAL else policy
+    """Simulate one mix of traces sharing a channel (C-core controller)."""
+    config = _scheduler_for(config, use_ranking)
+    eff, sched, nb, ns = _controller_args(policy, config)
     st, rank = _prep_mix(traces, policy, config)
-    shared, core_cycles = _simulate_multicore(
-        int(eff), nb, ns, config.timing, use_ranking,
+    controller.validate_mlp_window(st["mlp_window"])
+    shared, core_cycles = _controller_fn(eff, sched, nb, ns, config)(
         jnp.asarray(st["bank"]), jnp.asarray(st["subarray"]), jnp.asarray(st["row"]),
         jnp.asarray(st["is_write"]), jnp.asarray(st["gap"]), jnp.asarray(st["dep"]),
         jnp.asarray(st["mlp_window"]), jnp.asarray(rank))
-    alone = np.array([float(np.asarray(simulate(t, Policy.BASELINE, config).total_cycles))
-                      for t in traces])
+    alone = alone_baseline_cycles([traces], config)
     return MulticoreResult(shared=shared,
                            core_cycles=np.asarray(core_cycles, np.float64),
                            alone_cycles=alone,

@@ -1,0 +1,86 @@
+"""Pluggable memory-request schedulers for the controller layer.
+
+The controller (``controller.py``) holds one live head request per core and,
+every scan step, asks the scheduler which head to serve next. A scheduler is a
+*static* enum plus a pure key function: the controller computes an int32 key
+per core and serves ``argmin(key)``, so every variant stays JIT/vmap-compatible
+(the enum is a static argument, never traced).
+
+Key construction is tiered: the scheduler places each head request into a
+priority tier (row hit / open subarray / miss), and within a tier the oldest
+visible request wins (its visibility cycle is the low-order part of the key).
+Ties break toward the lowest core index, matching ``jnp.argmin``.
+
+  FCFS          first-come first-served: oldest visible head, period.
+  FRFCFS        FR-FCFS (Rixner et al.): row hits first, then oldest.
+  FRFCFS_SALP   FR-FCFS with a middle tier for requests to already-activated
+                subarrays — under MASA such a request skips the ACT (row hit)
+                or can proceed without closing another subarray's row, so
+                preferring it preserves subarray-level parallelism (the
+                paper's scheduler-awareness discussion, Sec. 5.3).
+  TCM           FR-FCFS composed with application-aware thread ranking
+                (TCM-style, Kim et al. MICRO'10): the latency-sensitive
+                (low-MPKI) half of the cores is strictly prioritized.
+"""
+from __future__ import annotations
+
+import enum
+
+import jax.numpy as jnp
+
+#: Tier spacing. Must exceed any realistic visibility cycle so tiers are
+#: strict; small enough that key arithmetic stays within int32 (the TCM
+#: rank subtraction can reach -2 * _BIG, the SALP miss tier +2 * _BIG).
+_BIG = jnp.int32(1 << 28)
+
+#: Key assigned to cores whose stream is exhausted — larger than any live key.
+_DEAD = jnp.int32(2_000_000_000)
+
+
+class Scheduler(enum.IntEnum):
+    FCFS = 0          # program/arrival order across cores
+    FRFCFS = 1        # row hits first, then oldest
+    FRFCFS_SALP = 2   # + prefer already-activated subarrays (MASA-aware)
+    TCM = 3           # FR-FCFS + latency-sensitive thread ranking
+
+    @property
+    def pretty(self) -> str:
+        return {0: "FCFS", 1: "FR-FCFS", 2: "FR-FCFS+SALP", 3: "TCM"}[int(self)]
+
+
+ALL_SCHEDULERS = (Scheduler.FCFS, Scheduler.FRFCFS, Scheduler.FRFCFS_SALP,
+                  Scheduler.TCM)
+
+
+def request_key(scheduler: int, vis, hit, sa_open, rank, pending,
+                n_cores: int, live):
+    """int32 selection key per core; the controller serves ``argmin``.
+
+    ``scheduler`` and ``n_cores`` are static; ``vis`` ([C] visibility cycles),
+    ``hit`` ([C] head is a row-buffer hit), ``sa_open`` ([C] head targets a
+    subarray with an activated row), ``rank`` ([C] TCM rank, 0 = most
+    latency-sensitive), ``pending`` ([C] head is visible by the time the data
+    bus frees, i.e. actually sitting in the request queue) and ``live``
+    ([C] stream not exhausted) are traced.
+
+    Priority tiers only reorder *pending* requests: a real FR-FCFS picks
+    among the requests queued at the controller — a row hit that will not
+    arrive for thousands of cycles must not pre-empt an old queued miss
+    (the scan serves requests in bus order, so scheduling a far-future
+    request first would stall the channel behind it).
+    """
+    scheduler = Scheduler(scheduler)
+    if scheduler == Scheduler.FCFS:
+        key = vis
+    elif scheduler == Scheduler.FRFCFS:
+        key = vis + jnp.where(pending & hit, 0, _BIG)
+    elif scheduler == Scheduler.FRFCFS_SALP:
+        key = vis + jnp.where(pending & hit, 0,
+                              jnp.where(pending & sa_open, _BIG, 2 * _BIG))
+    elif scheduler == Scheduler.TCM:
+        key = vis + jnp.where(pending & hit, 0, _BIG)
+        latency_sensitive = pending & (rank < (n_cores // 2))
+        key = key - jnp.where(latency_sensitive, 2 * _BIG, 0)
+    else:  # pragma: no cover - enum is exhaustive
+        raise ValueError(f"unknown scheduler {scheduler!r}")
+    return jnp.where(live, key, _DEAD)

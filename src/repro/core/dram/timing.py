@@ -65,10 +65,15 @@ class EnergyModel:
     cycle_ns: float = 1.876        # DDR3-1066 command-clock period
 
     def static_nj(self, cycles: float, extra_sa_cycles: float) -> float:
-        bg = self.p_background_mw * 1e-3 * cycles * self.cycle_ns  # mW * ns = pJ... see note
-        sa = self.p_sa_static_mw * 1e-3 * extra_sa_cycles * self.cycle_ns
-        # mW * ns = 1e-3 J/s * 1e-9 s = 1e-12 J = pJ; convert pJ -> nJ
-        return (bg + sa) * 1e-3
+        # Unit derivation: power is stored in mW, time in DRAM cycles.
+        #   mW * ns = (1e-3 J/s) * (1e-9 s) = 1e-12 J = 1 pJ,
+        # so (power-in-mW) * (cycles * cycle_ns) is directly picojoules and a
+        # single 1e-3 factor converts pJ -> nJ. (An earlier version also
+        # scaled the power by 1e-3 — mW -> W — which double-converted and
+        # underreported static energy 1000x.)
+        bg_pj = self.p_background_mw * cycles * self.cycle_ns
+        sa_pj = self.p_sa_static_mw * extra_sa_cycles * self.cycle_ns
+        return (bg_pj + sa_pj) * 1e-3
 
 
 DEFAULT_ENERGY = EnergyModel()

@@ -91,6 +91,24 @@ PAPER_WORKLOADS: tuple[WorkloadProfile, ...] = (
     WorkloadProfile("gups",        45.0, 0.50,  1.0, 6, 64, 0.60, 0.00),
 )
 
+#: Name -> profile for the suite (benchmarks/tests address workloads by name).
+WORKLOADS_BY_NAME: dict[str, WorkloadProfile] = {p.name: p for p in PAPER_WORKLOADS}
+
+#: Row-address stride between the cores of a multi-core mix (passed as
+#: ``generate_trace(..., row_space_offset=ROW_SPACE_STRIDE * core_index)``):
+#: each core gets its own hot rows while sharing banks. One constant so
+#: hand-built mixes and ``run_mix_sweep`` cells generate identical traces.
+ROW_SPACE_STRIDE = 4096
+
+
+def workload(name: str) -> WorkloadProfile:
+    """Suite profile by name; raises with the valid names on a typo."""
+    try:
+        return WORKLOADS_BY_NAME[name]
+    except KeyError:
+        raise KeyError(f"unknown workload {name!r}; expected one of "
+                       f"{sorted(WORKLOADS_BY_NAME)}") from None
+
 
 @dataclasses.dataclass
 class Trace:

@@ -17,15 +17,19 @@ shape bucketing and a content-hashed result cache:
 
 See ``docs/experiments.md`` for the grid API and artifact schema reference.
 """
-from repro.experiments.grid import Cell, SweepGrid
+from repro.experiments.grid import Cell, MixCell, MixGrid, SweepGrid
 from repro.experiments.cache import ResultCache, GLOBAL_CACHE, cell_key
-from repro.experiments.runner import (CellResult, SweepResult, run_sweep,
+from repro.experiments.runner import (CellResult, MixCellResult,
+                                      MixSweepResult, SweepResult,
+                                      run_mix_sweep, run_sweep,
                                       trace_for, clear_trace_cache)
 from repro.experiments.artifact import (SWEEP_SCHEMA, BENCH_SCHEMA,
                                         bench_artifact, write_artifact)
 
 __all__ = [
-    "Cell", "SweepGrid", "ResultCache", "GLOBAL_CACHE", "cell_key",
-    "CellResult", "SweepResult", "run_sweep", "trace_for", "clear_trace_cache",
+    "Cell", "MixCell", "MixGrid", "SweepGrid",
+    "ResultCache", "GLOBAL_CACHE", "cell_key",
+    "CellResult", "MixCellResult", "MixSweepResult", "SweepResult",
+    "run_mix_sweep", "run_sweep", "trace_for", "clear_trace_cache",
     "SWEEP_SCHEMA", "BENCH_SCHEMA", "bench_artifact", "write_artifact",
 ]

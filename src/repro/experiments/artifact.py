@@ -14,6 +14,7 @@ from __future__ import annotations
 
 import json
 import os
+import subprocess
 import time
 from typing import Any
 
@@ -21,13 +22,38 @@ SWEEP_SCHEMA = "repro.sweep/v1"
 BENCH_SCHEMA = "repro.bench/v1"
 
 
+def git_sha(cwd: str | None = None) -> str:
+    """Current git commit (with ``-dirty`` suffix), or ``"unknown"``.
+
+    Embedded in every ``repro.bench/v1`` artifact so a result can always be
+    traced back to the exact code that produced it. Defaults to THIS file's
+    repository, not the process working directory (benchmarks may be invoked
+    from anywhere).
+    """
+    if cwd is None:
+        cwd = os.path.dirname(os.path.abspath(__file__))
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "HEAD"], cwd=cwd, capture_output=True,
+            text=True, timeout=5, check=True).stdout.strip()
+        dirty = subprocess.run(
+            ["git", "status", "--porcelain"], cwd=cwd, capture_output=True,
+            text=True, timeout=5, check=True).stdout.strip()
+        return sha + ("-dirty" if dirty else "")
+    except Exception:
+        return "unknown"
+
+
 def bench_artifact(results: dict[str, Any], sweeps: list[dict[str, Any]],
                    argv: list[str] | None = None,
-                   cache_stats: dict[str, Any] | None = None) -> dict[str, Any]:
+                   cache_stats: dict[str, Any] | None = None,
+                   seed: int | None = None) -> dict[str, Any]:
     """Assemble the single top-level document ``benchmarks.run`` emits."""
     return {
         "schema_version": BENCH_SCHEMA,
         "created_unix": time.time(),
+        "git_sha": git_sha(),
+        "seed": seed,
         "argv": argv or [],
         "results": results,
         "sweeps": sweeps,

@@ -11,11 +11,15 @@ via three mechanisms:
    The baseline is therefore simulated once per (workload, geometry) cell, not
    once per mechanism policy compared against it.
 3. **Shape bucketing + vmap** — uncached cells are grouped by their static
-   compile signature (policy, geometry, timing, refresh mode, row policy,
-   trace length); each bucket becomes ONE batched, JIT-compiled
+   compile signature (policy, scheduler, geometry, timing, refresh mode, row
+   policy, trace length); each bucket becomes ONE batched, JIT-compiled
    :func:`repro.core.dram.engine.simulate_stacked` call, vmapped over the
    bucket's stacked traces. A 32-workload x 5-policy grid is 5 XLA programs,
    not 160.
+
+``run_mix_sweep`` executes the multi-core analogue (:class:`MixGrid`, the
+paper's policy x scheduler x mix surface) with the same bucketing idea over
+:func:`repro.core.dram.multicore.simulate_multicore_batch`.
 """
 from __future__ import annotations
 
@@ -31,9 +35,10 @@ from repro.core.dram.metrics import (avg_read_latency, energy_from_result,
                                      ipc_from_result, row_hit_rate,
                                      sasel_per_act)
 from repro.core.dram.policies import Policy
-from repro.core.dram.trace import Trace, WorkloadProfile, generate_trace, stack_traces
+from repro.core.dram.trace import (ROW_SPACE_STRIDE, Trace, WorkloadProfile,
+                                  generate_trace, stack_traces)
 from repro.experiments.cache import ResultCache, cell_key
-from repro.experiments.grid import Cell, SweepGrid, _json_safe
+from repro.experiments.grid import Cell, MixCell, MixGrid, SweepGrid, _json_safe
 
 _COUNTER_FIELDS = tuple(f.name for f in dataclasses.fields(SimResult))
 
@@ -49,22 +54,29 @@ def clear_trace_cache() -> None:
 
 
 def trace_for(workload: WorkloadProfile, n_requests: int, config: SimConfig,
-              seed: int) -> Trace:
-    """Memoized trace generation; geometry is part of the trace's identity."""
-    key = (workload, n_requests, config.n_banks, config.n_subarrays, seed)
+              seed: int, row_space_offset: int = 0) -> Trace:
+    """Memoized trace generation; geometry is part of the trace's identity.
+
+    ``row_space_offset`` shifts the hot-row address space (each core of a
+    multi-core mix gets its own rows while sharing banks).
+    """
+    key = (workload, n_requests, config.n_banks, config.n_subarrays, seed,
+           row_space_offset)
     tr = _TRACE_CACHE.get(key)
     if tr is None:
         tr = generate_trace(workload, n_requests, n_banks=config.n_banks,
-                            n_subarrays=config.n_subarrays, seed=seed)
+                            n_subarrays=config.n_subarrays, seed=seed,
+                            row_space_offset=row_space_offset)
         _TRACE_CACHE[key] = tr
     return tr
 
 
-def _bucket_key(cell: Cell, n_requests: int) -> tuple:
+def _bucket_key(cell: Cell | MixCell, n_requests: int) -> tuple:
     """Static compile signature: cells sharing it can share one vmapped call.
 
     Derived from the FULL config (like cell_key) so a future SimConfig field
     swept via config_axes can never land two different configs in one bucket.
+    Shared by ``run_sweep`` and ``run_mix_sweep``.
     """
     return (int(cell.policy), dataclasses.astuple(cell.config), n_requests)
 
@@ -227,3 +239,157 @@ def run_sweep(grid: SweepGrid, cache: ResultCache | None = None) -> SweepResult:
         "elapsed_s": round(time.perf_counter() - t0, 4),
     }
     return SweepResult(grid, results, stats)
+
+
+# ---------------------------------------------------------------------------
+# Multi-core mix sweeps (policy x scheduler x mix grids)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class MixCellResult:
+    """One (mix, policy, config) point of a :class:`MixGrid` run."""
+    cell: MixCell
+    counters: dict[str, int]          # shared-channel SimResult counters
+    weighted_speedup: float
+    core_cycles: list[int]            # per-core completion of its own stream
+    alone_cycles: list[float]         # per-core run-alone baseline reference
+
+    @property
+    def policy(self) -> Policy:
+        return self.cell.policy
+
+    @property
+    def config(self) -> SimConfig:
+        return self.cell.config
+
+    @property
+    def mix_name(self) -> str:
+        return self.cell.mix_name
+
+    def to_json(self) -> dict[str, Any]:
+        return {
+            "mix": self.mix_name,
+            "policy": self.cell.policy.name,
+            "overrides": {k: _json_safe(v)
+                          for k, v in self.cell.override_dict.items()},
+            "counters": self.counters,
+            "weighted_speedup": self.weighted_speedup,
+            "core_cycles": self.core_cycles,
+            "alone_cycles": self.alone_cycles,
+        }
+
+
+class MixSweepResult:
+    """Results of one mix-grid run, with weighted-speedup accessors."""
+
+    def __init__(self, grid: MixGrid, cells: list[MixCellResult],
+                 stats: dict[str, Any]) -> None:
+        self.grid = grid
+        self.cells = cells
+        self.stats = stats
+
+    def select(self, policy: Policy | None = None, mix: str | None = None,
+               **config_eq: Any) -> list[MixCellResult]:
+        out = []
+        for c in self.cells:
+            if policy is not None and c.policy != policy:
+                continue
+            if mix is not None and c.mix_name != mix:
+                continue
+            if any(getattr(c.config, k) != v for k, v in config_eq.items()):
+                continue
+            out.append(c)
+        return out
+
+    def weighted_speedups(self, policy: Policy,
+                          **config_eq: Any) -> np.ndarray:
+        """[M]-vector of weighted speedups in grid mix order."""
+        sel = self.select(policy=policy, **config_eq)
+        by_mix = {c.cell.mix_index: c for c in sel}
+        if len(by_mix) != len(sel):
+            raise ValueError(
+                f"selection is ambiguous ({len(sel)} cells, {len(by_mix)} "
+                f"mixes); add config filters (e.g. scheduler=...)")
+        vals = []
+        for i in range(len(self.grid.mixes)):
+            c = by_mix.get(i)
+            if c is None:
+                raise ValueError(
+                    f"no cell for mix {i} matching policy={policy} {config_eq}"
+                    f" — was it pruned by the grid's where filter?")
+            vals.append(c.weighted_speedup)
+        return np.asarray(vals, np.float64)
+
+    def to_json(self) -> dict[str, Any]:
+        return {
+            "schema_version": "repro.sweep/v1",
+            "kind": "mix_sweep",
+            "grid": self.grid.describe(),
+            "stats": self.stats,
+            "cells": [c.to_json() for c in self.cells],
+        }
+
+
+def run_mix_sweep(grid: MixGrid) -> MixSweepResult:
+    """Execute a :class:`MixGrid`: bucket by static shape, vmap over mixes.
+
+    Each (policy, config) bucket becomes ONE
+    :func:`repro.core.dram.multicore.simulate_multicore_batch` call vmapped
+    over the bucket's mixes ([M, C, N] stacked traces). The policy- and
+    scheduler-independent run-alone baseline references are computed once per
+    geometry/refresh point and shared across every policy x scheduler cell
+    (mix results are not content-hash cached — the multicore scan dominates
+    and mix grids are small).
+    """
+    from repro.core.dram.multicore import (alone_baseline_cycles,
+                                           simulate_multicore_batch)
+    from repro.core.dram.schedulers import Scheduler
+
+    t0 = time.perf_counter()
+    cells = grid.expand()
+
+    def mix_traces(cell: MixCell) -> list[Trace]:
+        return [trace_for(p, grid.n_requests, cell.config, grid.seed,
+                          row_space_offset=ROW_SPACE_STRIDE * i)
+                for i, p in enumerate(cell.profiles)]
+
+    # Run-alone references: scheduler-independent (a single stream has a
+    # single head request), so memoize on the config minus its scheduler.
+    alone_memo: dict[tuple, np.ndarray] = {}
+
+    def alone_for(cell: MixCell, traces: list[Trace]) -> np.ndarray:
+        ref_cfg = dataclasses.replace(cell.config, scheduler=Scheduler.FCFS)
+        key = (dataclasses.astuple(ref_cfg), cell.mix_index)
+        if key not in alone_memo:
+            alone_memo[key] = alone_baseline_cycles([traces], ref_cfg)
+        return alone_memo[key]
+
+    buckets: dict[tuple, list[int]] = {}
+    for i, c in enumerate(cells):
+        buckets.setdefault(_bucket_key(c, grid.n_requests), []).append(i)
+
+    results: dict[int, MixCellResult] = {}
+    for idxs in buckets.values():
+        bucket_cells = [cells[i] for i in idxs]
+        traces = [mix_traces(c) for c in bucket_cells]
+        alone = np.concatenate([alone_for(c, tr)
+                                for c, tr in zip(bucket_cells, traces)])
+        mc = simulate_multicore_batch(traces, bucket_cells[0].policy,
+                                      bucket_cells[0].config,
+                                      alone_cycles=alone)
+        for i, res in zip(idxs, mc):
+            counters = {f.name: int(np.asarray(getattr(res.shared, f.name)))
+                        for f in dataclasses.fields(SimResult)}
+            results[i] = MixCellResult(
+                cell=cells[i], counters=counters,
+                weighted_speedup=res.weighted_speedup,
+                core_cycles=[int(x) for x in res.core_cycles],
+                alone_cycles=[float(x) for x in res.alone_cycles])
+
+    stats = {
+        "n_cells": len(cells),
+        "n_cores": grid.n_cores,
+        "sim_batches": len(buckets),
+        "elapsed_s": round(time.perf_counter() - t0, 4),
+    }
+    return MixSweepResult(grid, [results[i] for i in range(len(cells))], stats)

@@ -9,6 +9,7 @@ from __future__ import annotations
 import time
 from typing import Callable
 
+import jax
 import numpy as np
 
 N_REQUESTS = 8000
@@ -54,8 +55,15 @@ def per_sim_cell_us(sweep, us: float) -> float:
 
 
 def timed(fn: Callable, *args, **kwargs):
+    """Wall-time one call in microseconds, *including* device completion.
+
+    JAX dispatch is asynchronous: without ``block_until_ready`` the clock
+    stops when the result is enqueued, not when it is computed, so every
+    ``us_per_call`` CSV row would underreport device time. Non-array leaves
+    (sweep objects, floats) pass through ``block_until_ready`` untouched.
+    """
     t0 = time.perf_counter()
-    out = fn(*args, **kwargs)
+    out = jax.block_until_ready(fn(*args, **kwargs))
     return out, (time.perf_counter() - t0) * 1e6
 
 
@@ -66,8 +74,17 @@ def emit(name: str, us: float, derived) -> str:
 
 
 def suite_traces(n: int = N_REQUESTS, seed: int = SEED):
-    from repro.core.dram import PAPER_WORKLOADS, generate_trace
-    return [generate_trace(p, n, seed=seed) for p in PAPER_WORKLOADS]
+    """Suite traces via the sweep runner's memoized trace cache.
+
+    Trace generation is a host-side Python loop over n requests; routing
+    through :func:`repro.experiments.runner.trace_for` means benchmark
+    modules sharing (workload, n, geometry, seed) cells regenerate nothing.
+    """
+    from repro.core.dram import PAPER_WORKLOADS
+    from repro.core.dram.engine import SimConfig
+    from repro.experiments.runner import trace_for
+    cfg = SimConfig()  # default geometry — matches generate_trace defaults
+    return [trace_for(p, n, cfg, seed) for p in PAPER_WORKLOADS]
 
 
 def suite_ipc(traces, policy):

@@ -22,6 +22,16 @@ machine (:mod:`engine`) does not:
 ``engine.simulate*`` instantiates this scan with one core;
 ``multicore.simulate_multicore*`` with C cores — there is exactly one
 implementation of the shared-channel semantics.
+
+Scan carry (see :mod:`repro.core.dram.state_layout`): the engine's four
+packed buffers plus a ``[C, CORE_F]`` per-core vector, the ``[C, _RING]``
+completion rings, and (when refreshing) a ``[nb, REF_F]`` refresh table —
+six int32 buffers total, updated with single-row dynamic scatters. The
+scan's ``unroll`` factor is tunable (``_SCAN_UNROLL``, swept to 1 on CPU);
+input-buffer donation was evaluated and removed — the scan already updates
+its carry in place and the only outputs are a handful of scalars, so XLA
+finds no donated buffer to reuse (it warns instead). docs/performance.md
+records both measurements.
 """
 from __future__ import annotations
 
@@ -32,12 +42,21 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.dram import engine as _engine
+from repro.core.dram import state_layout as L
 from repro.core.dram.policies import Policy
 from repro.core.dram.schedulers import request_key
 from repro.core.dram.timing import DramTiming
 
 _RING = _engine._RING
 _NEG = _engine._NEG
+
+#: Partial-unroll factor for the controller scan, chosen by the ``unroll``
+#: sweep in ``benchmarks/perf_bench.py`` (results are bit-identical for any
+#: value). The swept answer on CPU is **no unroll**: the step is almost
+#: entirely sequential gather/scatter, so unrolling multiplies code size
+#: without exposing parallelism — unroll=8 halved throughput and unroll=64
+#: took minutes to compile (see docs/performance.md for the numbers).
+_SCAN_UNROLL = 1
 
 
 def validate_mlp_window(mlp_window) -> None:
@@ -65,96 +84,185 @@ def _refresh_due0(nb: int, t_refi: int) -> jax.Array:
 
 @functools.partial(jax.jit, static_argnames=("policy", "scheduler", "n_banks",
                                              "n_subarrays", "timing",
-                                             "refresh_mode", "closed_row"))
+                                             "refresh_mode", "closed_row",
+                                             "unroll"))
 def _simulate_controller(policy: int, scheduler: int, n_banks: int,
                          n_subarrays: int, timing: DramTiming,
                          refresh_mode: int,
                          bank, subarray, row, is_write, gap, dep,  # [C, N]
                          mlp_window, rank,                         # [C]
-                         closed_row: bool = False):
+                         closed_row: bool = False,
+                         unroll: int = _SCAN_UNROLL):
     """Scan C*N controller steps; returns (SimResult, per-core max completion)."""
     t = timing
     C, N = bank.shape
     is_masa = policy == Policy.MASA
+    zero = jnp.int32(0)
+    bank_state0 = _engine._bank_state0(n_banks, n_subarrays)
+    # Per-bank refresh table [nb, REF_F]: the staggered tREFI deadline
+    # plus the in-flight refresh burst (end cycle, refreshed subarray).
+    # Once a served request triggers a refresh and the deadline advances,
+    # later heads to that bank must still see the burst until it ends —
+    # other cores' heads (C > 1), and, under DSARP+MASA, even the same
+    # core's: a non-target-subarray request is not blocked, so vis_prev
+    # does not advance past ref_end and a later target-subarray request
+    # would otherwise read the subarray mid-burst. Under blocking refresh
+    # (mode 1) the single-core vis_prev chain does carry every later
+    # request past ref_end, so there this state never binds.
+    ref0 = (jnp.zeros((n_banks, L.REF_F), jnp.int32)
+            .at[:, L.REF_NEXT_DUE].set(_refresh_due0(n_banks, t.t_refi))
+            if refresh_mode else None)
+
+    def head_visibility(ref, vis, hb, hs):
+        """Refresh gating of one step's head visibility (shared C=1 / C>1).
+
+        ``vis/hb/hs`` are [C] vectors (or scalars for the C=1 fast path);
+        returns the gated ``vis`` plus the refresh directive for the heads.
+        """
+        if not refresh_mode:
+            return vis, None
+        refb = jnp.moveaxis(
+            jax.lax.dynamic_slice(ref, (hb, zero), (1, L.REF_F))[0], -1, 0) \
+            if jnp.ndim(hb) == 0 else jnp.moveaxis(ref[hb], -1, 0)
+        busy_end = refb[L.REF_BUSY_UNTIL]
+        # a burst already started by an earlier step still blocks the bank
+        busy_blocks = (vis < busy_end) & (
+            jnp.bool_(refresh_mode == 1) | jnp.bool_(not is_masa)
+            | (hs == refb[L.REF_BUSY_TARGET]))
+        vis = jnp.where(busy_blocks, busy_end, vis)
+        due = refb[L.REF_NEXT_DUE]
+        ref_pending = vis >= due
+        ref_end = due + t.t_rfc
+        ref_target = (due // t.t_refi) % n_subarrays
+        blocks = ref_pending & (jnp.bool_(refresh_mode == 1)
+                                | jnp.bool_(not is_masa)
+                                | (hs == ref_target))
+        vis = jnp.where(blocks, jnp.maximum(vis, ref_end), vis)
+        return vis, dict(pending=ref_pending, end=ref_end, target=ref_target,
+                         due=due)
+
+    def update_ref(ref, directive, hb, vis):
+        """Advance the served bank's refresh row (scalar ``hb``/``vis``)."""
+        old_row = jax.lax.dynamic_slice(ref, (hb, zero), (1, L.REF_F))[0]
+        served_row = jnp.stack([
+            jnp.maximum(directive["due"] + t.t_refi, vis),
+            directive["end"], directive["target"]])
+        row_new = jnp.where(directive["pending"], served_row, old_row)
+        return jax.lax.dynamic_update_slice(ref, row_new[None], (hb, zero))
+
+    if C == 1:
+        # ---- single-core fast path --------------------------------------
+        # With one core there is exactly one head request per step, so the
+        # serve order is statically program order: the request fields ride
+        # in as scan `xs` (zero gathers), the scheduler/argmin disappears
+        # (argmin over one element is 0), and the per-core vectors collapse
+        # to scalars. Bit-identical to the general path by construction —
+        # tests/test_controller.py pins 1-core mixes against `simulate`.
+        mlp0 = mlp_window[0]
+        state0 = dict(bank=bank_state0, ring=jnp.zeros((_RING,), jnp.int32),
+                      vis_prev=zero, max_comp=zero)
+        if refresh_mode:
+            state0["ref"] = ref0
+
+        def step1(state, x):
+            # x is one [XS_F] row of the packed request tensor: unpacking is
+            # static indexing, fused into the step's arithmetic for free.
+            i, hb, hs, hw = x[L.XS_IDX], x[L.XS_BANK], x[L.XS_SA], x[L.XS_ROW]
+            hwr, hgap, hdep = x[L.XS_WR] != 0, x[L.XS_GAP], x[L.XS_DEP] != 0
+            ring = state["ring"]
+            rd = ring[jnp.stack([(i - 1) % _RING, (i - mlp0) % _RING])]
+            comp_prev = rd[0]
+            rob_lim = jnp.where(i >= mlp0, rd[1], 0)
+            vis = jnp.maximum(state["vis_prev"] + hgap,
+                              jnp.maximum(jnp.where(hdep, comp_prev, 0),
+                                          rob_lim))
+            vis, directive = head_visibility(state.get("ref"), vis, hb, hs)
+            req = dict(bank=hb, subarray=hs, row=hw, is_write=hwr, vis=vis)
+            if refresh_mode:
+                req["ref_pending"] = directive["pending"]
+                req["ref_target"] = directive["target"]
+            new_bank, comp = _engine._timing_step(policy, t, refresh_mode,
+                                                  state["bank"], req,
+                                                  closed_row=closed_row)
+            new = dict(state)
+            new["bank"] = new_bank
+            if refresh_mode:
+                new["ref"] = update_ref(state["ref"], directive, hb, vis)
+            new["ring"] = ring.at[i % _RING].set(comp)
+            new["vis_prev"] = vis
+            new["max_comp"] = jnp.maximum(state["max_comp"], comp)
+            return new, None
+
+        xs = jnp.stack([jnp.arange(N, dtype=jnp.int32), bank[0], subarray[0],
+                        row[0], is_write[0].astype(jnp.int32), gap[0],
+                        dep[0].astype(jnp.int32)], axis=1)   # [N, XS_F]
+        final, _ = jax.lax.scan(step1, state0, xs, unroll=unroll)
+        res = _engine.result_from_state(N, final["bank"]["scalars"],
+                                        final["vis_prev"])
+        return res, final["max_comp"][None]
+
+    # ---- general C-core path --------------------------------------------
+    # One packed [C, N, RQ_F] request tensor: each step gathers every head
+    # field with ONE advanced-indexing gather instead of seven.
+    reqs = jnp.stack([bank, subarray, row, is_write.astype(jnp.int32),
+                      gap, dep.astype(jnp.int32)], axis=-1)
     cores = jnp.arange(C, dtype=jnp.int32)
 
     state0 = dict(
-        bank=_engine._bank_state0(n_banks, n_subarrays),
-        ptr=jnp.zeros((C,), jnp.int32),
-        vis_prev=jnp.zeros((C,), jnp.int32),
+        bank=bank_state0,
+        core=jnp.zeros((C, L.CORE_F), jnp.int32),
         comp_ring=jnp.zeros((C, _RING), jnp.int32),
-        core_max_comp=jnp.zeros((C,), jnp.int32),
     )
     if refresh_mode:
-        state0["next_ref_due"] = _refresh_due0(n_banks, t.t_refi)
-        # In-flight refresh burst per bank: [end cycle, refreshed subarray].
-        # Once a served request triggers a refresh and the deadline advances,
-        # later heads to that bank must still see the burst until it ends —
-        # other cores' heads (C > 1), and, under DSARP+MASA, even the same
-        # core's: a non-target-subarray request is not blocked, so vis_prev
-        # does not advance past ref_end and a later target-subarray request
-        # would otherwise read the subarray mid-burst. Under blocking refresh
-        # (mode 1) the single-core vis_prev chain does carry every later
-        # request past ref_end, so there this state never binds.
-        state0["ref_busy_until"] = jnp.zeros((n_banks,), jnp.int32)
-        state0["ref_busy_target"] = jnp.zeros((n_banks,), jnp.int32)
+        state0["ref"] = ref0
 
     def step(state, _):
         bank_st = state["bank"]
-        ptr = state["ptr"]
+        core = state["core"]
+        ptr = core[:, L.CORE_PTR]
         live = ptr < N
         p = jnp.minimum(ptr, N - 1)
 
-        hb = bank[cores, p]
-        hs = subarray[cores, p]
-        hw = row[cores, p]
-        hgap = gap[cores, p]
-        hdep = dep[cores, p]
+        h = reqs[cores, p]                      # [C, RQ_F]: all head fields
+        hb, hs, hw = h[:, L.RQ_BANK], h[:, L.RQ_SA], h[:, L.RQ_ROW]
 
         # ---- per-core visibility of the head request
-        comp_prev = state["comp_ring"][cores, (p - 1) % _RING]
-        rob_lim = jnp.where(p >= mlp_window,
-                            state["comp_ring"][cores, (p - mlp_window) % _RING], 0)
-        vis = jnp.maximum(state["vis_prev"] + hgap,
-                          jnp.maximum(jnp.where(hdep, comp_prev, 0), rob_lim))
-
-        # ---- refresh: a due bank delays the heads it blocks
-        if refresh_mode:
-            # a burst already started by an earlier step still blocks the bank
-            busy_end = state["ref_busy_until"][hb]
-            busy_blocks = (vis < busy_end) & (
-                jnp.bool_(refresh_mode == 1) | jnp.bool_(not is_masa)
-                | (hs == state["ref_busy_target"][hb]))
-            vis = jnp.where(busy_blocks, busy_end, vis)
-            due = state["next_ref_due"][hb]
-            ref_pending = vis >= due
-            ref_end = due + t.t_rfc
-            ref_target = (due // t.t_refi) % n_subarrays
-            blocks = ref_pending & (jnp.bool_(refresh_mode == 1)
-                                    | jnp.bool_(not is_masa)
-                                    | (hs == ref_target))
-            vis = jnp.where(blocks, jnp.maximum(vis, ref_end), vis)
-        else:
-            ref_pending = jnp.zeros((C,), jnp.bool_)
-            ref_target = jnp.zeros((C,), jnp.int32)
+        ring_idx = jnp.stack([(p - 1) % _RING, (p - mlp_window) % _RING],
+                             axis=1)
+        rd = state["comp_ring"][cores[:, None], ring_idx]   # [C, 2]
+        comp_prev, rob_raw = rd[:, 0], rd[:, 1]
+        rob_lim = jnp.where(p >= mlp_window, rob_raw, 0)
+        vis = jnp.maximum(core[:, L.CORE_VIS_PREV] + h[:, L.RQ_GAP],
+                          jnp.maximum(
+                              jnp.where(h[:, L.RQ_DEP] != 0, comp_prev, 0),
+                              rob_lim))
+        vis, directive = head_visibility(state.get("ref"), vis, hb, hs)
 
         # ---- scheduler: key the live heads, serve the argmin
-        orow = bank_st["open_row"][hb, hs]
-        hit = orow == hw
-        sa_open = orow != _NEG
-        # A head is *pending* (actually queued at the controller) if it is
-        # visible by the time the shared data bus frees; priority tiers only
-        # reorder pending requests (see schedulers.request_key).
-        pending = vis <= bank_st["data_bus_free"]
-        key = request_key(scheduler, vis, hit, sa_open, rank, pending, C, live)
+        key = request_key(scheduler, bank_st, hb, hs, hw, vis, rank, C, live)
         c = jnp.argmin(key).astype(jnp.int32)
-        pc = p[c]
+
+        # ONE gather of the chosen head's fields + step bookkeeping
+        # (lanes RQ_VIS / RQ_PTR / RQ_MAX_COMP appended after RQ_F).
+        packed = jnp.concatenate(
+            [h, vis[:, None], p[:, None], core[:, L.CORE_MAX_COMP][:, None]],
+            axis=1)
+        hc = jax.lax.dynamic_slice(packed, (c, zero), (1, L.RQ_EXT_F))[0]
+        vis_c, pc, max_comp_c = hc[L.RQ_VIS], hc[L.RQ_PTR], hc[L.RQ_MAX_COMP]
 
         req = dict(
-            bank=hb[c], subarray=hs[c], row=hw[c],
-            is_write=is_write[c, pc], vis=vis[c],
-            ref_pending=ref_pending[c], ref_target=ref_target[c],
+            bank=hc[L.RQ_BANK], subarray=hc[L.RQ_SA], row=hc[L.RQ_ROW],
+            is_write=hc[L.RQ_WR] != 0, vis=vis_c,
         )
+        if refresh_mode:
+            d4 = jnp.stack([directive["due"], directive["end"],
+                            directive["target"],
+                            directive["pending"].astype(jnp.int32)], axis=1)
+            drow = jax.lax.dynamic_slice(d4, (c, zero), (1, 4))[0]
+            directive_c = dict(due=drow[0], end=drow[1], target=drow[2],
+                               pending=drow[3] != 0)
+            req["ref_pending"] = directive_c["pending"]
+            req["ref_target"] = directive_c["target"]
         new_bank, comp = _engine._timing_step(policy, t, refresh_mode,
                                               bank_st, req,
                                               closed_row=closed_row)
@@ -162,35 +270,19 @@ def _simulate_controller(policy: int, scheduler: int, n_banks: int,
         new = dict(state)
         new["bank"] = new_bank
         if refresh_mode:
-            new["next_ref_due"] = jnp.where(
-                ref_pending[c],
-                state["next_ref_due"].at[hb[c]].set(
-                    jnp.maximum(state["next_ref_due"][hb[c]] + t.t_refi,
-                                vis[c])),
-                state["next_ref_due"])
-            new["ref_busy_until"] = jnp.where(
-                ref_pending[c],
-                state["ref_busy_until"].at[hb[c]].set(ref_end[c]),
-                state["ref_busy_until"])
-            new["ref_busy_target"] = jnp.where(
-                ref_pending[c],
-                state["ref_busy_target"].at[hb[c]].set(ref_target[c]),
-                state["ref_busy_target"])
-        new["ptr"] = ptr.at[c].add(1)
-        new["vis_prev"] = state["vis_prev"].at[c].set(vis[c])
+            new["ref"] = update_ref(state["ref"], directive_c, hc[L.RQ_BANK],
+                                    vis_c)
+        # pc + 1 == ptr[c] + 1: the scan runs exactly C*N steps over C*N
+        # requests, so argmin always lands on a live core (dead keys are
+        # _DEAD) and the chosen ptr is never clamped by the min() above.
+        core_row = jnp.stack([pc + 1, vis_c,
+                              jnp.maximum(max_comp_c, comp)])
+        new["core"] = jax.lax.dynamic_update_slice(core, core_row[None],
+                                                   (c, zero))
         new["comp_ring"] = state["comp_ring"].at[c, pc % _RING].set(comp)
-        new["core_max_comp"] = state["core_max_comp"].at[c].set(
-            jnp.maximum(state["core_max_comp"][c], comp))
         return new, None
 
-    final, _ = jax.lax.scan(step, state0, None, length=C * N)
-    d = final["bank"]
-    res = _engine.SimResult(
-        total_cycles=jnp.maximum(d["max_comp"], jnp.max(final["vis_prev"])),
-        n_requests=jnp.int32(C * N),
-        n_act=d["c_act"], n_pre=d["c_pre"], n_rd=d["c_rd"], n_wr=d["c_wr"],
-        n_sasel=d["c_sasel"], n_hit=d["c_hit"],
-        sum_latency=d["sum_lat"], n_reads=d["c_reads"],
-        sa_open_cycles=d["sa_open_cycles"],
-    )
-    return res, final["core_max_comp"]
+    final, _ = jax.lax.scan(step, state0, None, length=C * N, unroll=unroll)
+    res = _engine.result_from_state(
+        C * N, final["bank"]["scalars"], final["core"][:, L.CORE_VIS_PREV])
+    return res, final["core"][:, L.CORE_MAX_COMP]

@@ -12,6 +12,15 @@ up in :mod:`repro.core.dram.controller`; the pluggable scheduling disciplines
 live in :mod:`repro.core.dram.schedulers`. The ``simulate*`` entry points
 here are thin single-core (1-core-mix) instantiations of the controller.
 
+State layout (:mod:`repro.core.dram.state_layout`): the per-subarray timing
+plane AND the per-bank vector state ride in ONE packed ``[nb, ns + 1, SA_F]``
+int32 tensor; a ``_timing_step`` gathers the target bank's ``[ns + 1, SA_F]``
+block with a single ``dynamic_slice``, computes on scalars / ``[ns + 1]``
+vectors, and scatters the block back with a single ``dynamic_update_slice``
+— O(S) work per scan step instead of O(B*S) full-array copies per
+conditional update (see docs/performance.md for the gather/scatter contract
+and the measured effect).
+
 Policy timing semantics (`t_*` are issue cycles; see timing.py for constants):
 
   same-subarray conflict (all policies):   PRE(s) -> tRP -> ACT(s) -> tRCD -> COL
@@ -35,12 +44,13 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core.dram import state_layout as L
 from repro.core.dram.policies import Policy
 from repro.core.dram.schedulers import Scheduler
 from repro.core.dram.timing import DramTiming, DDR3_1066
 from repro.core.dram.trace import Trace, to_ideal, stack_traces
 
-_NEG = jnp.int32(-1)
+_NEG = L.NEG
 _RING = 64  # completion ring size; controller.validate_mlp_window enforces
             # mlp_window < _RING at every simulate* entry
 
@@ -98,27 +108,21 @@ class SimResult:
 
 
 def _bank_state0(nb: int, ns: int) -> dict:
-    """Initial bank/subarray timing state (no request-visibility fields)."""
-    z = jnp.zeros((nb, ns), jnp.int32)
+    """Initial packed bank/subarray timing state (see state_layout.py).
+
+    Three buffers instead of a ~30-leaf dict: the ``[nb, ns + 1, SA_F]``
+    subarray plane (open_row = NEG, timing fields = 0; row ``ns`` is the
+    bank-vector row: designated = open_sa = NEG, last_act = 0), the 4-deep
+    ACT history, and the ``[SC_F]`` scalar/counter pack.
+    """
+    sa = (jnp.zeros((nb, ns + 1, L.SA_F), jnp.int32)
+          .at[:, :, L.SA_OPEN_ROW].set(_NEG)       # also BK_DESIGNATED = NEG
+          .at[:, ns, L.BK_OPEN_SA].set(_NEG))
+    scalars = jnp.zeros((L.SC_F,), jnp.int32).at[L.SC_COL_LAST].set(-(10 ** 6))
     return dict(
-        open_row=jnp.full((nb, ns), _NEG, jnp.int32),
-        act_done=z, ras_done=z, wrr_done=z, pre_done=z,
-        designated=jnp.full((nb,), _NEG, jnp.int32),
-        open_sa=jnp.full((nb,), _NEG, jnp.int32),
-        last_act_bank=z[:, 0],
-        act_hist=jnp.zeros((4,), jnp.int32),      # last 4 ACT issue times, [0] oldest
-        col_last=jnp.int32(-(10 ** 6)),
-        col_last_wr=jnp.bool_(False),
-        wr_data_end=jnp.int32(0),
-        data_bus_free=jnp.int32(0),
-        last_open_time=jnp.int32(0),              # for sa_open_cycles integral
-        open_count=jnp.int32(0),                  # currently activated subarrays
-        # counters
-        c_act=jnp.int32(0), c_pre=jnp.int32(0), c_rd=jnp.int32(0), c_wr=jnp.int32(0),
-        c_sasel=jnp.int32(0), c_hit=jnp.int32(0),
-        sum_lat=jnp.int32(0), c_reads=jnp.int32(0),
-        sa_open_cycles=jnp.int32(0),
-        max_comp=jnp.int32(0),
+        sa=sa,
+        act_hist=jnp.zeros((4,), jnp.int32),  # last 4 ACT issue times, [0] oldest
+        scalars=scalars,
     )
 
 
@@ -133,14 +137,39 @@ def _timing_step(policy: int, t: DramTiming, refresh_mode: int,
     controller's refresh directive for the target bank (``ref_pending``,
     ``ref_target``: close the refreshed row(s) this step). ``refresh_mode``:
     0 = off; 1 = blocking all-bank refresh (baseline DRAM); 2 = DSARP-style
-    subarray refresh (paper Sec. 6.1)."""
+    subarray refresh (paper Sec. 6.1).
+
+    Gather/scatter contract: exactly ONE ``dynamic_slice`` of the target
+    bank's ``[ns + 1, SA_F]`` block in (the bank-vector row rides along),
+    one ``[2, SA_F]`` indexed gather of the own/other subarray rows, and
+    exactly ONE ``dynamic_update_slice`` out. Every conditional update is
+    an unconditional write of ``jnp.where(cond, new, old)`` — never a
+    ``where`` over a full array copy.
+    """
     b, s, w = req["bank"], req["subarray"], req["row"]
     is_wr, vis = req["is_write"], req["vis"]
 
     is_masa = policy == Policy.MASA
+    sa, sc = state["sa"], state["scalars"]
+    ns_p1 = sa.shape[1]          # ns subarrays + the bank-vector row
+    ns = ns_p1 - 1
+    zero = jnp.int32(0)
 
-    orow = state["open_row"][b, s]
-    os_ = state["open_sa"][b]
+    # ---- ONE gather of the target bank --------------------------------------
+    bk = jax.lax.dynamic_slice(sa, (b, zero, zero),
+                               (1, ns_p1, L.SA_F))[0]    # [ns + 1, SA_F]
+    bv = bk[ns]                                          # bank-vector row
+    designated, os_, last_act_bank = (bv[L.BK_DESIGNATED], bv[L.BK_OPEN_SA],
+                                      bv[L.BK_LAST_ACT])
+
+    # Own + other-subarray rows in one indexed gather. ``so`` is made
+    # gather-safe independently of ``pre_other_needed`` (every consumer of
+    # the other row is gated on it, so the row read when the gate is off is
+    # irrelevant — but the index must stay in range).
+    so = jnp.where(os_ != _NEG, os_, 0)
+    pair = bk[jnp.stack([s, so])]                        # [2, SA_F]
+    own, oth = pair[0], pair[1]
+    orow = own[L.SA_OPEN_ROW]
 
     hit = orow == w
     act_needed = ~hit
@@ -148,15 +177,14 @@ def _timing_step(policy: int, t: DramTiming, refresh_mode: int,
     pre_other_needed = (jnp.bool_(not is_masa)) & (os_ != _NEG) & (os_ != s) & act_needed
 
     # ---- PRECHARGE timings (ready = after tRAS and write recovery)
-    so = jnp.where(pre_other_needed, os_, 0)  # safe index
-    t_pre_other = jnp.maximum(vis, jnp.maximum(state["ras_done"][b, so],
-                                               state["wrr_done"][b, so]))
-    t_pre_own = jnp.maximum(vis, jnp.maximum(state["ras_done"][b, s],
-                                             state["wrr_done"][b, s]))
+    t_pre_other = jnp.maximum(vis, jnp.maximum(oth[L.SA_RAS_DONE],
+                                               oth[L.SA_WRR_DONE]))
+    t_pre_own = jnp.maximum(vis, jnp.maximum(own[L.SA_RAS_DONE],
+                                             own[L.SA_WRR_DONE]))
 
     # ---- ACTIVATE timing
-    t_act = jnp.maximum(vis, state["pre_done"][b, s])            # own subarray precharged
-    t_act = jnp.maximum(t_act, state["last_act_bank"][b] + t.t_rrd_sa)
+    t_act = jnp.maximum(vis, own[L.SA_PRE_DONE])                 # own subarray precharged
+    t_act = jnp.maximum(t_act, last_act_bank + t.t_rrd_sa)
     t_act = jnp.maximum(t_act, state["act_hist"][3] + t.t_rrd)   # global ACT-ACT
     t_act = jnp.maximum(t_act, state["act_hist"][0] + t.t_faw)   # four-ACT window
     # own-subarray conflict: full PRE -> tRP -> ACT serialization (all policies)
@@ -169,83 +197,82 @@ def _timing_step(policy: int, t: DramTiming, refresh_mode: int,
     # SALP2 / MASA: ACT decoupled from the other subarray's PRE.
 
     # ---- column command
-    t_col = jnp.where(hit, jnp.maximum(vis, state["act_done"][b, s]), t_act + t.t_rcd)
+    t_col = jnp.where(hit, jnp.maximum(vis, own[L.SA_ACT_DONE]), t_act + t.t_rcd)
     if policy == Policy.SALP2:
         # global structures must be released: column waits for the other PRE's issue
         t_col = jnp.where(pre_other_needed, jnp.maximum(t_col, t_pre_other + 1), t_col)
     # MASA designation: SA_SEL needed when the bank's designated subarray changes
     # to serve a *hit* (a fresh ACT re-designates for free).
-    sasel_needed = jnp.bool_(is_masa) & hit & (state["designated"][b] != s)
+    sasel_needed = jnp.bool_(is_masa) & hit & (designated != s)
     t_col = jnp.where(sasel_needed, t_col + t.t_sa, t_col)
     # column bus: tCCD + write/read turnaround
-    t_col = jnp.maximum(t_col, state["col_last"] + t.t_ccd)
-    t_col = jnp.where(~is_wr & state["col_last_wr"],
-                      jnp.maximum(t_col, state["wr_data_end"] + t.t_wtr), t_col)
-    t_col = jnp.where(is_wr & ~state["col_last_wr"],
-                      jnp.maximum(t_col, state["col_last"] + t.t_rtw), t_col)
+    col_last = sc[L.SC_COL_LAST]
+    col_last_wr = sc[L.SC_COL_LAST_WR] != 0
+    t_col = jnp.maximum(t_col, col_last + t.t_ccd)
+    t_col = jnp.where(~is_wr & col_last_wr,
+                      jnp.maximum(t_col, sc[L.SC_WR_DATA_END] + t.t_wtr), t_col)
+    t_col = jnp.where(is_wr & ~col_last_wr,
+                      jnp.maximum(t_col, col_last + t.t_rtw), t_col)
     # data bus occupancy
     lat = jnp.where(is_wr, t.t_cwl, t.t_cl)
-    t_col = jnp.maximum(t_col, state["data_bus_free"] - lat)
+    t_col = jnp.maximum(t_col, sc[L.SC_DATA_BUS_FREE] - lat)
     data_start = t_col + lat
     data_end = data_start + t.t_bl
 
     comp = jnp.where(is_wr, t_col, data_end)
 
-    # ---- state updates ----------------------------------------------------
-    new = dict(state)
+    # ---- state updates: [ns + 1] vectors + masks, scattered back in one go --
+    # Unmasked broadcasts (refresh mode 1, closed-row pre_done ladder) may
+    # touch the bank-vector row's lanes; that row is rebuilt wholesale below,
+    # so nothing leaks.
+    sidx = jnp.arange(ns_p1, dtype=jnp.int32)
+    own_m = sidx == s
+    oth_m = (sidx == so) & pre_other_needed
+    own_pre_m = own_m & pre_own_needed
+    act_m = own_m & act_needed
 
     # subarray-open-count integral (extra activated subarrays => static power)
     now = t_col  # integration checkpoint
-    extra = jnp.maximum(state["open_count"] - 1, 0)
-    new["sa_open_cycles"] = state["sa_open_cycles"] + extra * jnp.maximum(
-        now - state["last_open_time"], 0)
-    new["last_open_time"] = jnp.maximum(now, state["last_open_time"])
+    extra = jnp.maximum(sc[L.SC_OPEN_COUNT] - 1, 0)
+    sa_open_cyc = sc[L.SC_SA_OPEN_CYC] + extra * jnp.maximum(
+        now - sc[L.SC_LAST_OPEN_TIME], 0)
+    last_open_time = jnp.maximum(now, sc[L.SC_LAST_OPEN_TIME])
 
-    open_row = state["open_row"]
-    pre_done = state["pre_done"]
-    ras_done = state["ras_done"]
-    act_done = state["act_done"]
-    wrr_done = state["wrr_done"]
+    open_row = bk[:, L.SA_OPEN_ROW]
+    act_done = bk[:, L.SA_ACT_DONE]
+    ras_done = bk[:, L.SA_RAS_DONE]
+    wrr_done = bk[:, L.SA_WRR_DONE]
+    pre_done = bk[:, L.SA_PRE_DONE]
 
-    # PRE other subarray (non-MASA path)
-    open_row = jnp.where(pre_other_needed, open_row.at[b, so].set(_NEG), open_row)
-    pre_done = jnp.where(pre_other_needed, pre_done.at[b, so].set(t_pre_other + t.t_rp), pre_done)
-    # PRE own subarray
-    open_row = jnp.where(pre_own_needed, open_row.at[b, s].set(_NEG), open_row)
-    pre_done = jnp.where(pre_own_needed, pre_done.at[b, s].set(t_pre_own + t.t_rp), pre_done)
+    # PRE other subarray (non-MASA path) + PRE own subarray
+    open_row = jnp.where(oth_m | own_pre_m, _NEG, open_row)
+    pre_done = jnp.where(oth_m, t_pre_other + t.t_rp, pre_done)
+    pre_done = jnp.where(own_pre_m, t_pre_own + t.t_rp, pre_done)
 
     delta_open = (jnp.where(act_needed, 1, 0)
                   - jnp.where(pre_other_needed, 1, 0)
                   - jnp.where(pre_own_needed, 1, 0))
-    new["open_count"] = state["open_count"] + delta_open
+    open_count = sc[L.SC_OPEN_COUNT] + delta_open
 
     # ACT
-    open_row = jnp.where(act_needed, open_row.at[b, s].set(w), open_row)
-    act_done = jnp.where(act_needed, act_done.at[b, s].set(t_act + t.t_rcd), act_done)
-    ras_done = jnp.where(act_needed, ras_done.at[b, s].set(t_act + t.t_ras), ras_done)
-    wrr_done = jnp.where(act_needed, wrr_done.at[b, s].set(0), wrr_done)
-    new["last_act_bank"] = jnp.where(
-        act_needed, state["last_act_bank"].at[b].set(t_act), state["last_act_bank"])
-    new["act_hist"] = jnp.where(
-        act_needed, jnp.concatenate([state["act_hist"][1:], t_act[None]]), state["act_hist"])
+    open_row = jnp.where(act_m, w, open_row)
+    act_done = jnp.where(act_m, t_act + t.t_rcd, act_done)
+    ras_done = jnp.where(act_m, t_act + t.t_ras, ras_done)
+    wrr_done = jnp.where(act_m, 0, wrr_done)
+    last_act_new = jnp.where(act_needed, t_act, last_act_bank)
+    act_hist = jnp.where(
+        act_needed, jnp.concatenate([state["act_hist"][1:], t_act[None]]),
+        state["act_hist"])
 
     # write recovery bookkeeping (after the column command)
-    wrr_done = jnp.where(is_wr, wrr_done.at[b, s].set(
-        jnp.maximum(wrr_done[b, s], data_end + t.t_wr)), wrr_done)
+    wrr_done = jnp.where(own_m & is_wr,
+                         jnp.maximum(wrr_done, data_end + t.t_wr), wrr_done)
     # read-to-precharge: fold tRTP into ras_done (both gate PRE)
-    ras_done = jnp.where(~is_wr, ras_done.at[b, s].set(
-        jnp.maximum(ras_done[b, s], t_col + t.t_rtp)), ras_done)
+    ras_done = jnp.where(own_m & ~is_wr,
+                         jnp.maximum(ras_done, t_col + t.t_rtp), ras_done)
 
-    new["open_row"], new["pre_done"] = open_row, pre_done
-    new["ras_done"], new["act_done"], new["wrr_done"] = ras_done, act_done, wrr_done
-
-    new["open_sa"] = state["open_sa"].at[b].set(jnp.where(jnp.bool_(not is_masa), s, state["open_sa"][b]))
-    new["designated"] = state["designated"].at[b].set(s)
-
-    new["col_last"] = t_col
-    new["col_last_wr"] = is_wr
-    new["wr_data_end"] = jnp.where(is_wr, data_end, state["wr_data_end"])
-    new["data_bus_free"] = data_end
+    open_sa_new = os_ if is_masa else s
+    designated_new = s
 
     if refresh_mode:
         # refresh requires a precharged target: all-bank refresh closes every
@@ -254,12 +281,10 @@ def _timing_step(policy: int, t: DramTiming, refresh_mode: int,
         # applies the row closure it directs.
         ref_pending, ref_target = req["ref_pending"], req["ref_target"]
         if refresh_mode == 1:
-            new["open_row"] = jnp.where(
-                ref_pending, new["open_row"].at[b, :].set(_NEG), new["open_row"])
+            open_row = jnp.where(ref_pending, _NEG, open_row)
         else:
-            new["open_row"] = jnp.where(
-                ref_pending, new["open_row"].at[b, ref_target].set(_NEG),
-                new["open_row"])
+            open_row = jnp.where(ref_pending & (sidx == ref_target), _NEG,
+                                 open_row)
 
     if closed_row:
         # Auto-precharge after every access. The auto-PRE occupies the bank's
@@ -267,29 +292,49 @@ def _timing_step(policy: int, t: DramTiming, refresh_mode: int,
         # applies: baseline serializes the NEXT ACT to the whole bank behind
         # tRP; SALP-1 overlaps all but the command slot; SALP-2/MASA are local.
         auto_pre = jnp.maximum(data_end, t_col + t.t_rtp)
-        new["open_row"] = new["open_row"].at[b, s].set(_NEG)
-        new["pre_done"] = new["pre_done"].at[b, s].set(
-            jnp.maximum(new["pre_done"][b, s], auto_pre + t.t_rp))
+        open_row = jnp.where(own_m, _NEG, open_row)
+        pre_done = jnp.where(own_m,
+                             jnp.maximum(pre_done, auto_pre + t.t_rp), pre_done)
         if policy in (Policy.BASELINE, Policy.IDEAL):
-            new["pre_done"] = new["pre_done"].at[b, :].set(
-                jnp.maximum(new["pre_done"][b, :], auto_pre + t.t_rp))
+            pre_done = jnp.maximum(pre_done, auto_pre + t.t_rp)
         elif policy == Policy.SALP1:
-            new["pre_done"] = new["pre_done"].at[b, :].set(
-                jnp.maximum(new["pre_done"][b, :], auto_pre + 1))
-            new["pre_done"] = new["pre_done"].at[b, s].set(
-                jnp.maximum(new["pre_done"][b, s], auto_pre + t.t_rp))
-        new["open_sa"] = new["open_sa"].at[b].set(_NEG)
-        new["open_count"] = new["open_count"] - jnp.where(act_needed, 1, 0)
+            pre_done = jnp.maximum(pre_done, auto_pre + 1)
+            pre_done = jnp.where(own_m,
+                                 jnp.maximum(pre_done, auto_pre + t.t_rp),
+                                 pre_done)
+        open_sa_new = _NEG
+        open_count = open_count - jnp.where(act_needed, 1, 0)
 
-    new["max_comp"] = jnp.maximum(state["max_comp"], comp)
-    new["c_act"] = state["c_act"] + act_needed
-    new["c_pre"] = state["c_pre"] + pre_other_needed + pre_own_needed
-    new["c_rd"] = state["c_rd"] + ~is_wr
-    new["c_wr"] = state["c_wr"] + is_wr
-    new["c_sasel"] = state["c_sasel"] + sasel_needed
-    new["c_hit"] = state["c_hit"] + hit
-    new["sum_lat"] = state["sum_lat"] + jnp.where(is_wr, 0, comp - vis)
-    new["c_reads"] = state["c_reads"] + ~is_wr
+    # ---- ONE scatter back ---------------------------------------------------
+    i32 = lambda x: jnp.asarray(x, jnp.int32)  # noqa: E731
+    new_bk = jnp.stack([open_row, act_done, ras_done, wrr_done, pre_done],
+                       axis=1)  # [ns + 1, SA_F]
+    new_bv = jnp.stack([i32(designated_new), i32(open_sa_new), last_act_new,
+                        zero, zero])
+    new_bk = new_bk.at[ns].set(new_bv)  # static index: rebuilt bank-vector row
+    new_sa = jax.lax.dynamic_update_slice(sa, new_bk[None], (b, zero, zero))
+    new_sc = jnp.stack([
+        t_col,                                               # SC_COL_LAST
+        i32(is_wr),                                          # SC_COL_LAST_WR
+        jnp.where(is_wr, data_end, sc[L.SC_WR_DATA_END]),    # SC_WR_DATA_END
+        data_end,                                            # SC_DATA_BUS_FREE
+        last_open_time,                                      # SC_LAST_OPEN_TIME
+        open_count,                                          # SC_OPEN_COUNT
+        sc[L.SC_C_ACT] + i32(act_needed),
+        sc[L.SC_C_PRE] + i32(pre_other_needed) + i32(pre_own_needed),
+        sc[L.SC_C_RD] + i32(~is_wr),
+        sc[L.SC_C_WR] + i32(is_wr),
+        sc[L.SC_C_SASEL] + i32(sasel_needed),
+        sc[L.SC_C_HIT] + i32(hit),
+        sc[L.SC_SUM_LAT] + jnp.where(is_wr, 0, comp - vis),
+        sc[L.SC_C_READS] + i32(~is_wr),
+        sa_open_cyc,                                         # SC_SA_OPEN_CYC
+        jnp.maximum(sc[L.SC_MAX_COMP], comp),                # SC_MAX_COMP
+    ])
+
+    new = dict(state)
+    new["sa"] = new_sa
+    new["act_hist"], new["scalars"] = act_hist, new_sc
     return new, comp
 
 
@@ -298,6 +343,19 @@ def _controller_args(policy: Policy, config: SimConfig):
     nb, ns = config.geometry_for(policy)
     eff = Policy.BASELINE if policy == Policy.IDEAL else policy
     return int(eff), int(Scheduler(config.scheduler)), nb, ns
+
+
+def result_from_state(n_requests, scalars, vis_prev) -> SimResult:
+    """Unpack the packed scalar carry into the public SimResult counters."""
+    return SimResult(
+        total_cycles=jnp.maximum(scalars[L.SC_MAX_COMP], jnp.max(vis_prev)),
+        n_requests=jnp.int32(n_requests),
+        n_act=scalars[L.SC_C_ACT], n_pre=scalars[L.SC_C_PRE],
+        n_rd=scalars[L.SC_C_RD], n_wr=scalars[L.SC_C_WR],
+        n_sasel=scalars[L.SC_C_SASEL], n_hit=scalars[L.SC_C_HIT],
+        sum_latency=scalars[L.SC_SUM_LAT], n_reads=scalars[L.SC_C_READS],
+        sa_open_cycles=scalars[L.SC_SA_OPEN_CYC],
+    )
 
 
 def simulate(trace: Trace, policy: Policy, config: SimConfig = SimConfig()) -> SimResult:

@@ -9,6 +9,12 @@ FR-FCFS, FR-FCFS+SALP-aware, or TCM-style application-aware ranking — the
 scheduler combinations the paper evaluates on top of SALP. Refresh/DSARP and
 the closed-row policy apply here exactly as in single-core, via ``SimConfig``.
 
+The controller scan underneath runs on the packed state layout
+(:mod:`repro.core.dram.state_layout`); with C == 1 it takes a statically
+specialized fast path (serve order = program order, no scheduler argmin)
+that is bit-identical to the general path — the 1-core-mix ≡ ``simulate``
+assertions in tests/test_controller.py pin exactly that equivalence.
+
 Metrics: weighted speedup = sum_i IPC_shared(i) / IPC_alone(i).
 """
 from __future__ import annotations

@@ -28,6 +28,8 @@ import enum
 
 import jax.numpy as jnp
 
+from repro.core.dram import state_layout as L
+
 #: Tier spacing. Must exceed any realistic visibility cycle so tiers are
 #: strict; small enough that key arithmetic stays within int32 (the TCM
 #: rank subtraction can reach -2 * _BIG, the SALP miss tier +2 * _BIG).
@@ -52,24 +54,32 @@ ALL_SCHEDULERS = (Scheduler.FCFS, Scheduler.FRFCFS, Scheduler.FRFCFS_SALP,
                   Scheduler.TCM)
 
 
-def request_key(scheduler: int, vis, hit, sa_open, rank, pending,
+def request_key(scheduler: int, bank_state: dict, hb, hs, hw, vis, rank,
                 n_cores: int, live):
     """int32 selection key per core; the controller serves ``argmin``.
 
-    ``scheduler`` and ``n_cores`` are static; ``vis`` ([C] visibility cycles),
-    ``hit`` ([C] head is a row-buffer hit), ``sa_open`` ([C] head targets a
-    subarray with an activated row), ``rank`` ([C] TCM rank, 0 = most
-    latency-sensitive), ``pending`` ([C] head is visible by the time the data
-    bus frees, i.e. actually sitting in the request queue) and ``live``
-    ([C] stream not exhausted) are traced.
+    ``scheduler`` and ``n_cores`` are static; the rest are traced. The key
+    function reads the engine's packed state directly
+    (:mod:`repro.core.dram.state_layout`): the heads' open rows come from one
+    ``[C]`` gather of the ``sa`` plane, giving the row-hit (``hit``) and
+    activated-subarray (``sa_open``) bits, and the data-bus-free scalar gives
+    the *pending* gate. ``hb/hs/hw`` are the ``[C]`` head bank / subarray /
+    row vectors, ``vis`` the ``[C]`` visibility cycles, ``rank`` the ``[C]``
+    TCM ranks (0 = most latency-sensitive), ``live`` marks cores whose
+    stream is not exhausted.
 
-    Priority tiers only reorder *pending* requests: a real FR-FCFS picks
-    among the requests queued at the controller — a row hit that will not
-    arrive for thousands of cycles must not pre-empt an old queued miss
-    (the scan serves requests in bus order, so scheduling a far-future
-    request first would stall the channel behind it).
+    Priority tiers only reorder *pending* requests (head visible by the time
+    the shared data bus frees, i.e. actually sitting in the request queue): a
+    real FR-FCFS picks among the requests queued at the controller — a row
+    hit that will not arrive for thousands of cycles must not pre-empt an
+    old queued miss (the scan serves requests in bus order, so scheduling a
+    far-future request first would stall the channel behind it).
     """
     scheduler = Scheduler(scheduler)
+    orow = bank_state["sa"][hb, hs, L.SA_OPEN_ROW]
+    hit = orow == hw
+    sa_open = orow != L.NEG
+    pending = vis <= bank_state["scalars"][L.SC_DATA_BUS_FREE]
     if scheduler == Scheduler.FCFS:
         key = vis
     elif scheduler == Scheduler.FRFCFS:

@@ -76,7 +76,10 @@ def _bucket_key(cell: Cell | MixCell, n_requests: int) -> tuple:
 
     Derived from the FULL config (like cell_key) so a future SimConfig field
     swept via config_axes can never land two different configs in one bucket.
-    Shared by ``run_sweep`` and ``run_mix_sweep``.
+    Shared by ``run_sweep`` and ``run_mix_sweep``. Scan-tuning knobs that
+    cannot change results (``controller._SCAN_UNROLL``) are deliberately NOT
+    part of the signature — results are bit-identical for any value, so they
+    must not split buckets or miss the content-hash cache.
     """
     return (int(cell.policy), dataclasses.astuple(cell.config), n_requests)
 

@@ -49,6 +49,8 @@ REGISTRY: tuple[Bench, ...] = (
           "Sec. 4/9.3: multicore + TCM scheduling (batched mixes)"),
     Bench("sched", "benchmarks.sched_bench", ("system", "sched"),
           "Sec. 4/9.3: policy x scheduler x mix grid, refresh on"),
+    Bench("mapping", "benchmarks.mapping_bench", ("mapping",),
+          "Frontend: address-mapping x policy sensitivity (dense footprint)"),
     Bench("perf", "benchmarks.perf_bench", ("perf",),
           "Simulator throughput trajectory (writes BENCH_perf.json)"),
     Bench("kernels", "benchmarks.kernel_bench", ("accel",),

@@ -19,6 +19,11 @@ programs.
 
 The simulator is layered (see docs/architecture.md):
 
+  * ``address_map.py``/``trace.py`` — the frontend: pluggable physical-address
+                        mappings (``SimConfig.mapping``), the synthetic
+                        32-workload suite (docs/workloads.md), and
+                        ramulator/DRAMSim-style trace-file ingestion
+                        (``Trace.from_file``; docs/address-mapping.md).
   * ``engine.py``     — bank/subarray timing state machine (the device).
   * ``controller.py`` — memory controller: per-core visibility, completion
                         rings, request window, refresh bookkeeping; ONE scan
@@ -29,7 +34,12 @@ The simulator is layered (see docs/architecture.md):
 from repro.core.dram.timing import DramTiming, EnergyModel, CoreModel, DDR3_1066, DEFAULT_ENERGY, DEFAULT_CORE
 from repro.core.dram.policies import Policy
 from repro.core.dram.schedulers import Scheduler, ALL_SCHEDULERS
-from repro.core.dram.trace import (WorkloadProfile, generate_trace, PAPER_WORKLOADS,
+from repro.core.dram.address_map import (AddressMapping, BitSlicedMapping,
+                                         ContiguousMapping, GoldenRatioMapping,
+                                         XorMapping, DEFAULT_MAPPING,
+                                         NAMED_MAPPINGS, mapping_for)
+from repro.core.dram.trace import (WorkloadProfile, Trace, generate_trace,
+                                   PAPER_WORKLOADS,
                                    WORKLOADS_BY_NAME, workload, stack_traces,
                                    ROW_SPACE_STRIDE)
 from repro.core.dram.engine import (simulate, simulate_batch, simulate_stacked,
@@ -39,7 +49,10 @@ from repro.core.dram.metrics import ipc_from_result, energy_from_result, summari
 __all__ = [
     "DramTiming", "EnergyModel", "CoreModel", "DDR3_1066", "DEFAULT_ENERGY", "DEFAULT_CORE",
     "Policy", "Scheduler", "ALL_SCHEDULERS",
-    "WorkloadProfile", "generate_trace", "PAPER_WORKLOADS",
+    "AddressMapping", "BitSlicedMapping", "ContiguousMapping",
+    "GoldenRatioMapping", "XorMapping", "DEFAULT_MAPPING", "NAMED_MAPPINGS",
+    "mapping_for",
+    "WorkloadProfile", "Trace", "generate_trace", "PAPER_WORKLOADS",
     "WORKLOADS_BY_NAME", "workload", "stack_traces", "ROW_SPACE_STRIDE",
     "simulate", "simulate_batch", "simulate_stacked", "SimConfig", "SimResult",
     "ipc_from_result", "energy_from_result", "summarize",

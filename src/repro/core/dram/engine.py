@@ -77,6 +77,13 @@ class SimConfig:
     # request), so the default is inert for `simulate`; in multicore it
     # selects among the cores' head requests (paper Sec. 4 / 9.3).
     scheduler: Scheduler = Scheduler.FCFS
+    # Address-mapping spec (frontend layer, docs/address-mapping.md): how
+    # physical addresses decode into (bank, subarray, row). The timing core
+    # never reads it — it binds at trace generation / ingestion
+    # (repro.experiments.runner.trace_for, Trace.from_file) — but it lives
+    # here so sweeps treat layout as an ordinary config axis and result-cache
+    # keys distinguish mappings. "golden" is the pinned historical default.
+    mapping: str = "golden"
 
     def geometry_for(self, policy: Policy) -> tuple[int, int]:
         """IDEAL turns every subarray into a real bank."""

@@ -1,4 +1,4 @@
-"""Workload -> memory-request trace generation.
+"""Workload -> memory-request trace generation + external-trace ingestion.
 
 Traces are generated on the host with numpy (deterministic per seed) and fed to
 the JAX simulator as arrays. A workload is a small Markov process over a set of
@@ -7,28 +7,36 @@ characteristics* of the paper's 32-application suite (SPEC CPU2006 + STREAM +
 GUPS + TPC classes): misses-per-kilo-instruction (MPKI), write fraction
 (=> WMPKI), row-buffer run length, number of concurrent streams (=> bank
 conflict pressure), pointer-chasing dependence fraction, and streaming-ness.
+See docs/workloads.md for the knob-by-knob reference and the calibration
+provenance of the suite table.
 
 The *baseline* is calibrated against these published characteristics; the
 mechanisms' gains are then emergent from the timing model — they are never fit.
+
+Address mapping (docs/address-mapping.md): the generator emits a *physical
+address* stream in the canonical layout of
+:mod:`repro.core.dram.address_map`; an :class:`AddressMapping` then decodes it
+into the ``(bank, subarray, row)`` arrays the simulator consumes. The pinned
+default (``"golden"``) reproduces the historical hard-coded golden-ratio
+row->subarray hash bit-for-bit; any other mapping replays the *same* physical
+stream under a different layout. :meth:`Trace.from_file` ingests
+ramulator/DRAMSim-style ``cycle addr R|W`` text traces through the same
+decode path, and :meth:`Trace.dump` writes one back (the round trip is exact
+for dependence-free traces; the text format has no dependence column).
 """
 from __future__ import annotations
 
 import dataclasses
+import difflib
+import os
 import zlib
-from typing import Sequence
+from typing import IO, Sequence
 
 import numpy as np
 
+from repro.core.dram.address_map import (AddressMapping, DEFAULT_MAPPING,
+                                         mapping_for)
 from repro.core.dram.timing import CoreModel, DEFAULT_CORE
-
-# Golden-ratio hash so that rows spread uniformly over subarrays, independent
-# of stride patterns (the paper assumes rows hash across subarrays; two hot
-# rows land in the same subarray w.p. 1/n_subarrays).
-_HASH_MULT = 2654435761
-
-
-def _row_to_subarray(row: np.ndarray, n_subarrays: int) -> np.ndarray:
-    return ((row.astype(np.uint64) * _HASH_MULT) >> np.uint64(11)).astype(np.int64) % n_subarrays
 
 
 @dataclasses.dataclass(frozen=True)
@@ -102,12 +110,23 @@ ROW_SPACE_STRIDE = 4096
 
 
 def workload(name: str) -> WorkloadProfile:
-    """Suite profile by name; raises with the valid names on a typo."""
+    """Suite profile by name; raises with the valid names (and the nearest
+    match) on a typo."""
     try:
         return WORKLOADS_BY_NAME[name]
     except KeyError:
-        raise KeyError(f"unknown workload {name!r}; expected one of "
+        close = difflib.get_close_matches(str(name), WORKLOADS_BY_NAME, n=1)
+        hint = f" (did you mean {close[0]!r}?)" if close else ""
+        raise KeyError(f"unknown workload {name!r}{hint}; expected one of "
                        f"{sorted(WORKLOADS_BY_NAME)}") from None
+
+
+#: ``Trace.dump`` / ``Trace.from_file`` header (carries what the text columns
+#: cannot: the format version and the core's ROB-limited MLP window).
+_TRACE_HEADER = "# repro-trace v1"
+
+_WRITE_TOKENS = {"W", "WR", "WRITE", "P_MEM_WR"}
+_READ_TOKENS = {"R", "RD", "READ", "P_MEM_RD"}
 
 
 @dataclasses.dataclass
@@ -121,9 +140,141 @@ class Trace:
     dep: np.ndarray        # bool  [n]  depends on previous request's completion
     mlp_window: int        # ROB-limited outstanding misses for this workload
     profile: WorkloadProfile | None = None
+    addr: np.ndarray | None = None   # uint64 [n] physical addresses (canonical
+                                     # layout; None for hand-built traces)
+    mapping: str = DEFAULT_MAPPING   # spec the (bank, subarray, row) arrays
+                                     # were decoded under
 
     def __len__(self) -> int:
         return int(self.bank.shape[0])
+
+    @classmethod
+    def from_file(cls, path: str | os.PathLike | IO[str],
+                  n_banks: int = 8, n_subarrays: int = 8,
+                  rows_per_bank: int = 32768,
+                  mapping: str | AddressMapping = DEFAULT_MAPPING,
+                  mlp_window: int | None = None) -> "Trace":
+        """Ingest a ramulator/DRAMSim-style text trace.
+
+        Each non-comment line is ``cycle addr R|W`` (or ``addr R|W`` — the
+        cycle column is optional and gaps default to 0): ``cycle`` is the DRAM
+        cycle the core exposes the request (monotone non-decreasing), ``addr``
+        a decimal or ``0x``-hex physical byte address, and the type token one
+        of R/RD/READ/P_MEM_RD or W/WR/WRITE/P_MEM_WR (case-insensitive).
+        Addresses are decoded into ``(bank, subarray, row)`` by ``mapping``,
+        so one file replays under any layout. ``# repro-trace v1`` headers
+        written by :meth:`dump` restore ``mlp_window`` (an explicit argument
+        wins; the fallback is the default core's MSHR count). The text format
+        has no dependence column: ``dep`` is all-False.
+        """
+        if hasattr(path, "read"):
+            lines = list(path)
+        else:
+            with open(path) as f:
+                lines = list(f)
+
+        header_mlp = None
+        cycles, addrs, writes = [], [], []
+        for lineno, raw in enumerate(lines, 1):
+            line = raw.strip()
+            if line.startswith(_TRACE_HEADER):
+                for tok in line.split():
+                    if tok.startswith("mlp_window="):
+                        header_mlp = int(tok.split("=", 1)[1])
+                continue
+            if not line or line.startswith("#"):
+                continue
+            toks = line.split()
+            if len(toks) == 2:
+                cyc, a, rw = None, toks[0], toks[1]
+            elif len(toks) == 3:
+                try:
+                    cyc = int(toks[0])
+                except ValueError:
+                    raise ValueError(f"line {lineno}: bad cycle token "
+                                     f"{toks[0]!r}") from None
+                a, rw = toks[1], toks[2]
+            else:
+                raise ValueError(f"line {lineno}: expected 'cycle addr R|W' "
+                                 f"or 'addr R|W', got {line!r}")
+            rw = rw.upper()
+            if rw in _WRITE_TOKENS:
+                writes.append(True)
+            elif rw in _READ_TOKENS:
+                writes.append(False)
+            else:
+                raise ValueError(f"line {lineno}: unknown request type "
+                                 f"{rw!r} (expected one of "
+                                 f"{sorted(_READ_TOKENS | _WRITE_TOKENS)})")
+            cycles.append(cyc)
+            try:
+                # base 0 for 0x-hex; plain base 10 rescues zero-padded
+                # decimals ("00421") that base 0 rejects as bad octal
+                addrs.append(int(a, 0) if not a.lstrip("+-").startswith("0")
+                             or a.lower().startswith(("0x", "0b", "0o"))
+                             else int(a, 10))
+            except ValueError:
+                raise ValueError(f"line {lineno}: bad address token {a!r} "
+                                 f"(expected decimal or 0x-hex)") from None
+        if not addrs:
+            raise ValueError("trace file contains no requests")
+
+        addr = np.asarray(addrs, np.uint64)
+        if all(c is None for c in cycles):
+            gap = np.zeros(len(addr), np.int64)
+        elif any(c is None for c in cycles):
+            # a mixed file means a malformed line, not an addr-only trace;
+            # silently zeroing every gap would change simulated timing
+            bad = cycles.index(None) + 1
+            raise ValueError(f"trace mixes 'cycle addr R|W' and 'addr R|W' "
+                             f"lines (first cycle-less request is #{bad}); "
+                             f"use one form throughout")
+        else:
+            cyc_arr = np.asarray(cycles, np.int64)
+            gap = np.maximum(np.diff(cyc_arr, prepend=cyc_arr[:1]), 0)
+            if gap.max() >= 2 ** 31:
+                i = int(gap.argmax())
+                raise ValueError(
+                    f"cycle gap of {int(gap[i])} before request #{i + 1} "
+                    f"overflows the simulator's int32 gap field")
+
+        m = mapping_for(mapping, n_banks, n_subarrays, rows_per_bank)
+        bank, subarray, row = m.decode(addr)
+        if mlp_window is None:
+            mlp_window = header_mlp if header_mlp is not None else DEFAULT_CORE.mshr
+        return cls(bank=bank.astype(np.int32),
+                   subarray=subarray.astype(np.int32),
+                   row=row.astype(np.int32),
+                   is_write=np.asarray(writes, bool),
+                   gap=gap.astype(np.int32),
+                   dep=np.zeros(len(addr), bool),
+                   mlp_window=int(mlp_window), addr=addr, mapping=m.spec)
+
+    def dump(self, path: str | os.PathLike | IO[str]) -> None:
+        """Write the trace as ``cycle addr R|W`` text (see :meth:`from_file`).
+
+        Requires physical addresses (``self.addr``); the cycle column is the
+        cumulative sum of ``gap``. Dependence flags are NOT representable in
+        the text format — dump refuses a trace with live ``dep`` bits rather
+        than silently changing its simulated timing.
+        """
+        if self.addr is None:
+            raise ValueError("trace has no physical addresses to dump; "
+                             "generate with generate_trace() or ingest via "
+                             "Trace.from_file()")
+        if self.dep.any():
+            raise ValueError(
+                "the text trace format has no dependence column; clear dep "
+                "first (dataclasses.replace(trace, dep=np.zeros_like(trace.dep)))")
+        cycles = np.cumsum(self.gap.astype(np.int64))
+        out = path if hasattr(path, "write") else open(path, "w")
+        try:
+            out.write(f"{_TRACE_HEADER} mlp_window={int(self.mlp_window)}\n")
+            for c, a, w in zip(cycles, self.addr, self.is_write):
+                out.write(f"{int(c)} 0x{int(a):x} {'W' if w else 'R'}\n")
+        finally:
+            if out is not path:
+                out.close()
 
 
 def generate_trace(
@@ -135,11 +286,24 @@ def generate_trace(
     core: CoreModel = DEFAULT_CORE,
     seed: int = 0,
     row_space_offset: int = 0,
+    mapping: str | AddressMapping = DEFAULT_MAPPING,
+    footprint_rows: int | None = None,
 ) -> Trace:
     """Generate one workload trace.
 
     ``row_space_offset`` shifts the hot-row address space (used to give each
     core of a multi-core mix its own rows while sharing banks).
+
+    ``mapping`` / ``footprint_rows`` are the physical-address mode
+    (docs/address-mapping.md): the Markov machinery below always runs
+    identically (same RNG stream), producing a canonical physical-address
+    stream; ``mapping`` then decodes it into ``(bank, subarray, row)``. The
+    default ``"golden"`` mapping is bit-identical to the historical
+    hard-coded frontend. ``footprint_rows`` confines the workload's resident
+    set to a contiguous physical region of that many rows (dense OS page
+    allocation) — the regime where subarray-oblivious mappings collapse
+    SALP/MASA gains because the whole footprint fits in one contiguous
+    subarray slab.
     """
     rng = np.random.default_rng(
         np.random.SeedSequence([seed, zlib.crc32(profile.name.encode())]))
@@ -208,7 +372,20 @@ def generate_trace(
             bank[i] = hot_bank[s, cur[s]]
             row[i] = hot_row[s, cur[s]]
 
-    subarray = _row_to_subarray(row, n_subarrays)
+    if footprint_rows is not None:
+        if not 0 < footprint_rows <= rows_per_bank:
+            raise ValueError(f"footprint_rows must be in (0, {rows_per_bank}];"
+                             f" got {footprint_rows}")
+        # Dense resident set: fold the abstract row ids into a contiguous
+        # physical region (per-core regions stay disjoint via the offset).
+        row = (row % footprint_rows + row_space_offset) % rows_per_bank
+
+    # Physical-address mode: encode the canonical stream, decode under the
+    # requested mapping. The golden default round-trips (bank, row) exactly
+    # and applies the historical hash — bit-identical to the old frontend.
+    m = mapping_for(mapping, n_banks, n_subarrays, rows_per_bank)
+    addr = m.encode(bank, row)
+    bank, subarray, row = m.decode(addr)
 
     is_write = rng.random(n_requests) < profile.wr_frac
     dep = (rng.random(n_requests) < profile.dep_frac) & ~is_write
@@ -229,23 +406,41 @@ def generate_trace(
         dep=dep,
         mlp_window=core.mlp_window(profile.mpki),
         profile=profile,
+        addr=addr,
+        mapping=m.spec,
     )
 
 
 def to_ideal(trace: Trace, n_banks: int, n_subarrays: int) -> Trace:
-    """Rewrite a trace so every subarray becomes its own real bank ("Ideal")."""
+    """Rewrite a trace so every subarray becomes its own real bank ("Ideal").
+
+    The rewritten (bank, subarray) arrays no longer correspond to any decode
+    of the original physical addresses, so ``addr`` is dropped — ``dump`` on
+    an ideal trace refuses instead of silently writing addresses that would
+    replay as the non-ideal trace.
+    """
     return dataclasses.replace(
         trace,
         bank=(trace.bank * n_subarrays + trace.subarray).astype(np.int32),
         subarray=np.zeros_like(trace.subarray),
+        addr=None,
     )
 
 
 def stack_traces(traces: Sequence[Trace]) -> dict[str, np.ndarray]:
-    """Stack equal-length traces into [W, N] arrays for vmapped simulation."""
+    """Stack equal-length traces into [W, N] arrays for vmapped simulation.
+
+    Stacking requests that were decoded under *different* address mappings is
+    almost always a sweep-construction bug (cells of one vmapped bucket must
+    share a config, and the mapping is a config axis), so it is rejected.
+    """
     n = len(traces[0])
     assert all(len(t) == n for t in traces), "traces must be equal length to stack"
-    return {
+    mappings = {t.mapping for t in traces}
+    if len(mappings) > 1:
+        raise ValueError(f"cannot stack traces decoded under different "
+                         f"address mappings: {sorted(mappings)}")
+    stacked = {
         "bank": np.stack([t.bank for t in traces]),
         "subarray": np.stack([t.subarray for t in traces]),
         "row": np.stack([t.row for t in traces]),
@@ -254,3 +449,6 @@ def stack_traces(traces: Sequence[Trace]) -> dict[str, np.ndarray]:
         "dep": np.stack([t.dep for t in traces]),
         "mlp_window": np.array([t.mlp_window for t in traces], dtype=np.int32),
     }
+    if all(t.addr is not None for t in traces):
+        stacked["addr"] = np.stack([t.addr for t in traces])
+    return stacked

@@ -93,6 +93,10 @@ class SweepGrid:
     config_axes: Mapping[str, Sequence[Any]] = dataclasses.field(default_factory=dict)
     configs: Sequence[Mapping[str, Any]] | None = None
     where: Callable[[Policy, dict[str, Any]], bool] | None = None
+    #: Physical-address mode: confine each workload's resident set to a
+    #: contiguous region of this many rows (None = historical uniform rows).
+    #: Part of every trace's identity; see docs/address-mapping.md.
+    footprint_rows: int | None = None
 
     def __post_init__(self) -> None:
         _validate_config_span(self.base_config, self.config_axes, self.configs)
@@ -123,6 +127,7 @@ class SweepGrid:
             "policies": [p.name for p in self.policies],
             "n_requests": self.n_requests,
             "seed": self.seed,
+            "footprint_rows": self.footprint_rows,
             "base_config": _json_safe(dataclasses.asdict(self.base_config)),
             "config_axes": {k: [_json_safe(v) for v in vs]
                             for k, vs in self.config_axes.items()},
@@ -171,11 +176,22 @@ class MixGrid:
     config_axes: Mapping[str, Sequence[Any]] = dataclasses.field(default_factory=dict)
     configs: Sequence[Mapping[str, Any]] | None = None
     where: Callable[[Policy, dict[str, Any]], bool] | None = None
+    #: Physical-address mode knob; see :class:`SweepGrid.footprint_rows`.
+    footprint_rows: int | None = None
 
     def __post_init__(self) -> None:
         _validate_config_span(self.base_config, self.config_axes, self.configs)
         if not self.mixes:
             raise ValueError("MixGrid needs at least one mix")
+        if self.footprint_rows is not None:
+            from repro.core.dram.trace import ROW_SPACE_STRIDE
+            if self.footprint_rows > ROW_SPACE_STRIDE:
+                # per-core regions are offset by ROW_SPACE_STRIDE; a larger
+                # footprint would silently overlap the cores' hot rows
+                raise ValueError(
+                    f"footprint_rows={self.footprint_rows} exceeds the "
+                    f"per-core row-space stride ({ROW_SPACE_STRIDE}); cores "
+                    f"of a mix would share hot rows")
         cores = {len(m) for m in self.mixes}
         if len(cores) != 1:
             raise ValueError(f"all mixes must have the same core count; got {sorted(cores)}")
@@ -210,6 +226,7 @@ class MixGrid:
             "policies": [p.name for p in self.policies],
             "n_requests": self.n_requests,
             "seed": self.seed,
+            "footprint_rows": self.footprint_rows,
             "base_config": _json_safe(dataclasses.asdict(self.base_config)),
             "config_axes": {k: [_json_safe(v) for v in vs]
                             for k, vs in self.config_axes.items()},

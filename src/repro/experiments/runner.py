@@ -54,19 +54,25 @@ def clear_trace_cache() -> None:
 
 
 def trace_for(workload: WorkloadProfile, n_requests: int, config: SimConfig,
-              seed: int, row_space_offset: int = 0) -> Trace:
-    """Memoized trace generation; geometry is part of the trace's identity.
+              seed: int, row_space_offset: int = 0,
+              footprint_rows: int | None = None) -> Trace:
+    """Memoized trace generation; geometry AND address mapping are part of
+    the trace's identity (``config.mapping`` decodes the physical stream).
 
     ``row_space_offset`` shifts the hot-row address space (each core of a
-    multi-core mix gets its own rows while sharing banks).
+    multi-core mix gets its own rows while sharing banks); ``footprint_rows``
+    is the physical-address mode's dense-resident-set knob
+    (docs/address-mapping.md).
     """
     key = (workload, n_requests, config.n_banks, config.n_subarrays, seed,
-           row_space_offset)
+           row_space_offset, config.mapping, footprint_rows)
     tr = _TRACE_CACHE.get(key)
     if tr is None:
         tr = generate_trace(workload, n_requests, n_banks=config.n_banks,
                             n_subarrays=config.n_subarrays, seed=seed,
-                            row_space_offset=row_space_offset)
+                            row_space_offset=row_space_offset,
+                            mapping=config.mapping,
+                            footprint_rows=footprint_rows)
         _TRACE_CACHE[key] = tr
     return tr
 
@@ -195,7 +201,8 @@ def run_sweep(grid: SweepGrid, cache: ResultCache | None = None) -> SweepResult:
     t0 = time.perf_counter()
     cells = grid.expand()
 
-    traces = [trace_for(c.workload, grid.n_requests, c.config, grid.seed)
+    traces = [trace_for(c.workload, grid.n_requests, c.config, grid.seed,
+                        footprint_rows=grid.footprint_rows)
               for c in cells]
     keys = [cell_key(tr, c.policy, c.config) for tr, c in zip(traces, cells)]
 
@@ -353,7 +360,8 @@ def run_mix_sweep(grid: MixGrid) -> MixSweepResult:
 
     def mix_traces(cell: MixCell) -> list[Trace]:
         return [trace_for(p, grid.n_requests, cell.config, grid.seed,
-                          row_space_offset=ROW_SPACE_STRIDE * i)
+                          row_space_offset=ROW_SPACE_STRIDE * i,
+                          footprint_rows=grid.footprint_rows)
                 for i, p in enumerate(cell.profiles)]
 
     # Run-alone references: scheduler-independent (a single stream has a

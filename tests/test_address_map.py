@@ -1,0 +1,189 @@
+"""Address-mapping frontend: decode semantics, pinned default bit-identity,
+and the mapping as a sweep/cache axis."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.dram import (PAPER_WORKLOADS, Policy, SimConfig,
+                             generate_trace, mapping_for, simulate,
+                             stack_traces, workload)
+from repro.core.dram.address_map import (BitSlicedMapping, ContiguousMapping,
+                                         GoldenRatioMapping, XorMapping,
+                                         golden_subarray)
+from repro.experiments import ResultCache, SweepGrid, cell_key, run_sweep
+
+NB, NS, RPB = 8, 8, 32768
+GEO = dict(n_banks=NB, n_subarrays=NS, rows_per_bank=RPB)
+
+
+def rand_bank_row(seed=0, n=2000):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, NB, n), rng.integers(0, RPB, n)
+
+
+class TestDecode:
+    @pytest.mark.parametrize("spec", ["golden", "contiguous", "xor",
+                                      "bits:row-bank-sa", "bits:sa-row-bank",
+                                      "bits:bank-sa-row"])
+    def test_ranges_and_determinism(self, spec):
+        m = mapping_for(spec, NB, NS, RPB)
+        bank, row = rand_bank_row()
+        addr = m.encode(bank, row)
+        b, s, r = m.decode(addr)
+        b2, s2, r2 = m.decode(addr)
+        for got, hi in ((b, NB), (s, NS), (r, RPB)):
+            assert got.min() >= 0 and got.max() < hi
+        assert (b == b2).all() and (s == s2).all() and (r == r2).all()
+        assert m.spec == spec
+
+    def test_canonical_fields_round_trip(self):
+        """Mappings that keep the canonical bank/row slices invert encode."""
+        bank, row = rand_bank_row(1)
+        for spec in ("golden", "contiguous", "xor"):
+            m = mapping_for(spec, NB, NS, RPB)
+            b, _, r = m.decode(m.encode(bank, row))
+            assert (b == bank).all() and (r == row).all(), spec
+
+    def test_column_and_offset_bits_are_dropped(self):
+        m = mapping_for("golden", NB, NS, RPB)
+        bank, row = rand_bank_row(2, n=500)
+        base = m.decode(m.encode(bank, row))
+        jitter = m.decode(m.encode(bank, row) + np.uint64(0x1FC0))  # col+byte bits
+        for a, b in zip(base, jitter):
+            assert (a == b).all()
+
+    def test_golden_matches_historical_hash(self):
+        _, row = rand_bank_row(3)
+        m = GoldenRatioMapping(NB, NS, RPB)
+        _, sa, _ = m.decode(m.encode(np.zeros_like(row), row))
+        ref = ((row.astype(np.uint64) * 2654435761) >> np.uint64(11)).astype(np.int64) % NS
+        assert (sa == ref).all()
+        assert (golden_subarray(row, NS) == ref).all()
+
+    def test_contiguous_is_slabbed(self):
+        m = ContiguousMapping(NB, NS, RPB)
+        bank, row = rand_bank_row(4)
+        _, sa, r = m.decode(m.encode(bank, row))
+        assert (sa == r // (RPB // NS)).all()
+        # a footprint inside one slab never leaves its subarray
+        row_small = row % 1000
+        _, sa_small, _ = m.decode(m.encode(bank, row_small))
+        assert len(np.unique(sa_small)) == 1
+
+    def test_xor_spreads_dense_footprints(self):
+        m = XorMapping(NB, NS, RPB)
+        bank, row = rand_bank_row(5)
+        _, sa, _ = m.decode(m.encode(bank, row % 1000))
+        assert len(np.unique(sa)) == NS
+
+    def test_bit_sliced_rejects_bad_geometry_and_order(self):
+        with pytest.raises(ValueError, match="power of two"):
+            BitSlicedMapping(6, NS, RPB)
+        with pytest.raises(ValueError, match="permutation"):
+            mapping_for("bits:row-bank-bank", NB, NS, RPB)
+
+    def test_mapping_for_unknown_spec_lists_valid(self):
+        with pytest.raises(ValueError) as ei:
+            mapping_for("golde", NB, NS, RPB)
+        msg = str(ei.value)
+        assert "golden" in msg and "contiguous" in msg and "bits:" in msg
+
+    def test_mapping_for_geometry_mismatch(self):
+        m = GoldenRatioMapping(NB, NS, RPB)
+        assert mapping_for(m, NB, NS, RPB) is m
+        with pytest.raises(ValueError, match="geometry"):
+            mapping_for(m, NB, 4, RPB)
+
+
+class TestGenerateTraceMapping:
+    def test_default_identical_to_explicit_golden(self):
+        p = workload("lbm")
+        t0 = generate_trace(p, 400, seed=11)
+        t1 = generate_trace(p, 400, seed=11, mapping="golden")
+        for f in ("bank", "subarray", "row", "is_write", "gap", "dep", "addr"):
+            assert np.array_equal(getattr(t0, f), getattr(t1, f)), f
+        assert t0.mapping == t1.mapping == "golden"
+
+    def test_same_physical_stream_under_every_mapping(self):
+        """Swapping the mapping reinterprets the SAME addresses."""
+        p = workload("milc")
+        ts = {s: generate_trace(p, 400, seed=11, mapping=s)
+              for s in ("golden", "contiguous", "xor")}
+        ref = ts["golden"]
+        for s, t in ts.items():
+            assert np.array_equal(t.addr, ref.addr), s
+            assert np.array_equal(t.is_write, ref.is_write), s
+            assert np.array_equal(t.gap, ref.gap), s
+            assert t.mapping == s
+
+    def test_footprint_confines_rows(self):
+        t = generate_trace(workload("mcf"), 600, seed=3, footprint_rows=512)
+        assert t.row.max() < 512
+        t2 = generate_trace(workload("mcf"), 600, seed=3, footprint_rows=512,
+                            row_space_offset=4096)
+        assert 4096 <= t2.row.min() and t2.row.max() < 4096 + 512
+
+    def test_footprint_rejects_bad_values(self):
+        with pytest.raises(ValueError, match="footprint_rows"):
+            generate_trace(workload("mcf"), 10, footprint_rows=0)
+
+    def test_contiguous_dense_footprint_collapses_masa_gain(self):
+        """The mapping_bench scenario at unit-test scale: a dense footprint
+        under the contiguous mapping leaves nothing for MASA to overlap."""
+        p = workload("lbm")
+        kw = dict(seed=7, footprint_rows=1024)
+        gains = {}
+        for spec in ("contiguous", "xor"):
+            t = generate_trace(p, 500, mapping=spec, **kw)
+            cfg = SimConfig(mapping=spec)
+            base = int(simulate(t, Policy.BASELINE, cfg).total_cycles)
+            masa = int(simulate(t, Policy.MASA, cfg).total_cycles)
+            gains[spec] = base / masa - 1.0
+        assert gains["xor"] > 0.05
+        assert gains["contiguous"] < 0.5 * gains["xor"]
+
+    def test_stack_traces_rejects_mixed_mappings(self):
+        p = workload("gups")
+        a = generate_trace(p, 50, seed=1, mapping="golden")
+        b = generate_trace(p, 50, seed=1, mapping="xor")
+        with pytest.raises(ValueError, match="mapping"):
+            stack_traces([a, b])
+        assert stack_traces([a, a])["addr"].shape == (2, 50)
+
+
+class TestMappingAsSweepAxis:
+    WLS = tuple(p for p in PAPER_WORKLOADS if p.name in ("lbm", "mcf"))
+
+    def test_cell_key_distinguishes_mappings(self):
+        p = self.WLS[0]
+        t_g = generate_trace(p, 100, seed=7)
+        t_x = generate_trace(p, 100, seed=7, mapping="xor")
+        assert (cell_key(t_g, Policy.MASA, SimConfig())
+                != cell_key(t_x, Policy.MASA, SimConfig(mapping="xor")))
+
+    def test_grid_sweeps_mapping_with_parity(self):
+        from repro.experiments import trace_for
+        grid = SweepGrid(name="t", workloads=self.WLS,
+                         policies=(Policy.BASELINE, Policy.MASA),
+                         n_requests=150,
+                         config_axes={"mapping": ("golden", "contiguous")},
+                         footprint_rows=1024)
+        sweep = run_sweep(grid, ResultCache())
+        assert sweep.stats["n_cells"] == 2 * 2 * 2
+        for cell in sweep.cells:
+            tr = trace_for(cell.workload, grid.n_requests, cell.config,
+                           grid.seed, footprint_rows=grid.footprint_rows)
+            assert tr.mapping == cell.config.mapping
+            ref = simulate(tr, cell.policy, cell.config)
+            assert cell.counters["total_cycles"] == int(ref.total_cycles)
+        # the axis is selectable like any SimConfig field
+        g = sweep.speedup_pct(Policy.MASA, mapping="contiguous")
+        assert g.shape == (len(self.WLS),)
+
+    def test_mix_grid_rejects_footprint_overlapping_core_stride(self):
+        from repro.experiments import MixGrid
+        with pytest.raises(ValueError, match="stride"):
+            MixGrid(name="t", mixes=[(self.WLS[0], self.WLS[1])],
+                    policies=(Policy.BASELINE,), n_requests=50,
+                    footprint_rows=8192)

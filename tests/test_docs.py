@@ -1,0 +1,83 @@
+"""Docs cannot silently rot: every relative link in the markdown docs must
+resolve, and every ```python snippet must at least compile — and, unless
+tagged with an HTML comment containing ``no-run`` just above the fence,
+actually execute (doctest-style, with a namespace accumulated per file so
+later snippets can build on earlier ones)."""
+from __future__ import annotations
+
+import re
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+DOC_FILES = sorted((REPO / "docs").glob("*.md")) + [REPO / "README.md"]
+
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_FENCE = re.compile(r"^```(\w*)\s*$")
+
+
+def _snippets(path: Path):
+    """Yield (lineno, language, code, run) for each fenced block."""
+    lines = path.read_text().splitlines()
+    i = 0
+    while i < len(lines):
+        m = _FENCE.match(lines[i])
+        if not m:
+            i += 1
+            continue
+        lang, start = m.group(1), i + 1
+        j = start
+        while j < len(lines) and not lines[j].startswith("```"):
+            j += 1
+        # a `<!-- ... no-run ... -->` comment within the 3 lines above the
+        # fence demotes the block to compile-only
+        above = "\n".join(lines[max(0, i - 3):i])
+        run = not re.search(r"<!--[^>]*no-run", above)
+        yield start + 1, lang, "\n".join(lines[start:j]), run
+        i = j + 1
+
+
+def test_docs_exist():
+    assert len(DOC_FILES) >= 6, [p.name for p in DOC_FILES]
+
+
+@pytest.mark.parametrize("path", DOC_FILES, ids=lambda p: p.name)
+def test_relative_links_resolve(path):
+    broken = []
+    for target in _LINK.findall(path.read_text()):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        rel = target.split("#", 1)[0]
+        if not (path.parent / rel).exists():
+            broken.append(target)
+    assert not broken, f"{path.name}: broken links {broken}"
+
+
+@pytest.mark.parametrize("path", DOC_FILES, ids=lambda p: p.name)
+def test_python_snippets_compile(path):
+    found = False
+    for lineno, lang, code, _ in _snippets(path):
+        if lang == "python":
+            found = True
+            compile(code, f"{path.name}:{lineno}", "exec")
+    if path.name in ("workloads.md", "address-mapping.md", "experiments.md"):
+        assert found, f"{path.name} should carry runnable snippets"
+
+
+@pytest.mark.parametrize(
+    "path",
+    [p for p in DOC_FILES
+     if any(lang == "python" and run for _, lang, _, run in _snippets(p))],
+    ids=lambda p: p.name)
+def test_python_snippets_execute(path):
+    ns: dict = {"__name__": f"doc_snippet[{path.name}]"}
+    for lineno, lang, code, run in _snippets(path):
+        if lang != "python" or not run:
+            continue
+        try:
+            exec(compile(code, f"{path.name}:{lineno}", "exec"), ns)
+        except Exception as e:  # noqa: BLE001 — re-raise with doc location
+            raise AssertionError(
+                f"snippet at {path.name}:{lineno} failed: {type(e).__name__}: {e}"
+            ) from e

@@ -44,7 +44,8 @@ REGISTRY: tuple[Bench, ...] = (
     Bench("row_policy", "benchmarks.row_policy_bench", ("sens",),
           "Sec. 9.3: open vs closed row policy"),
     Bench("refresh", "benchmarks.refresh_bench", ("refresh",),
-          "Sec. 6.1 extension: DSARP refresh parallelization (grid sweep)"),
+          "Sec. 6.1 extension: refresh ladder REFab/REFpb/DARP/SARP/DSARP "
+          "x 8-32 Gb (grid sweep)"),
     Bench("multicore", "benchmarks.multicore_bench", ("system",),
           "Sec. 4/9.3: multicore + TCM scheduling (batched mixes)"),
     Bench("sched", "benchmarks.sched_bench", ("system", "sched"),

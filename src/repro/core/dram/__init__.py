@@ -33,6 +33,7 @@ The simulator is layered (see docs/architecture.md):
 """
 from repro.core.dram.timing import DramTiming, EnergyModel, CoreModel, DDR3_1066, DEFAULT_ENERGY, DEFAULT_CORE
 from repro.core.dram.policies import Policy
+from repro.core.dram.refresh import RefreshPolicy, REFRESH_LADDER
 from repro.core.dram.schedulers import Scheduler, ALL_SCHEDULERS
 from repro.core.dram.address_map import (AddressMapping, BitSlicedMapping,
                                          ContiguousMapping, GoldenRatioMapping,
@@ -48,7 +49,7 @@ from repro.core.dram.metrics import ipc_from_result, energy_from_result, summari
 
 __all__ = [
     "DramTiming", "EnergyModel", "CoreModel", "DDR3_1066", "DEFAULT_ENERGY", "DEFAULT_CORE",
-    "Policy", "Scheduler", "ALL_SCHEDULERS",
+    "Policy", "RefreshPolicy", "REFRESH_LADDER", "Scheduler", "ALL_SCHEDULERS",
     "AddressMapping", "BitSlicedMapping", "ContiguousMapping",
     "GoldenRatioMapping", "XorMapping", "DEFAULT_MAPPING", "NAMED_MAPPINGS",
     "mapping_for",

@@ -48,6 +48,8 @@ import dataclasses
 
 import numpy as np
 
+from repro.core.dram.errors import did_you_mean
+
 #: Golden-ratio multiplier of the pinned default mapping (Knuth's 2^32 / phi).
 GOLDEN_MULT = 2654435761
 
@@ -226,7 +228,8 @@ def mapping_for(spec: str | AddressMapping, n_banks: int, n_subarrays: int,
         order = tuple(spec[len("bits:"):].split("-"))
         return BitSlicedMapping(n_banks, n_subarrays, rows_per_bank,
                                 order=order)  # type: ignore[arg-type]
+    hint = did_you_mean(str(spec), sorted(NAMED_MAPPINGS))
     raise ValueError(
-        f"unknown address mapping {spec!r}; expected one of "
+        f"unknown address mapping {spec!r}{hint}; expected one of "
         f"{sorted(NAMED_MAPPINGS)} or 'bits:<msb-to-lsb order>' "
         f"(a permutation of {_FIELDS}, e.g. 'bits:row-sa-bank')")

@@ -14,10 +14,14 @@ machine (:mod:`engine`) does not:
 * **request scheduling** — every step the pluggable scheduler
   (:mod:`schedulers`) keys the cores' live head requests and the controller
   serves ``argmin``;
-* **refresh bookkeeping** — per-bank staggered tREFI deadlines; a due bank
-  delays the visibility of requests it blocks (all of them under blocking
-  refresh, only the refreshed subarray's under DSARP+MASA) and directs the
-  timing layer to close the refreshed row(s).
+* **refresh bookkeeping** — per-bank staggered tREFI deadlines under the
+  refresh-policy ladder (:mod:`repro.core.dram.refresh`, docs/refresh.md):
+  a due bank delays the visibility of the requests its burst blocks (all of
+  them under blocking REFab/REFpb, only the refreshed subarray's under
+  SARP — and under DSARP+MASA), DARP additionally schedules the bursts
+  themselves (idle pull-in, bounded postpone, write-shadow
+  parallelization), and every mode directs the timing layer to close the
+  refreshed row(s).
 
 ``engine.simulate*`` instantiates this scan with one core;
 ``multicore.simulate_multicore*`` with C cores — there is exactly one
@@ -113,11 +117,24 @@ def _simulate_controller(policy: int, scheduler: int, n_banks: int,
             .at[:, L.REF_NEXT_DUE].set(_refresh_due0(n_banks, t.t_refi))
             if refresh_mode else None)
 
-    def head_visibility(ref, vis, hb, hs):
+    def head_visibility(ref, vis, hb, hs, hwr):
         """Refresh gating of one step's head visibility (shared C=1 / C>1).
 
-        ``vis/hb/hs`` are [C] vectors (or scalars for the C=1 fast path);
-        returns the gated ``vis`` plus the refresh directive for the heads.
+        ``vis/hb/hs/hwr`` are [C] vectors (or scalars for the C=1 fast
+        path); returns the gated ``vis`` plus the refresh directive for the
+        heads. ``refresh_mode`` dispatch is static (Python branches):
+
+        * modes 1/2 (REFab / DSARP) — the historical deadline machinery,
+          kept literally unchanged (regression-pinned bit-for-bit);
+        * modes 3/5 (REFpb / SARP) — same machinery with the per-bank
+          ``tRFCpb`` burst; SARP blocks only the refreshed subarray's
+          requests, with or without MASA (refresh uses no global bitlines);
+        * mode 4 (DARP) — refreshes are scheduled, not fired: pulled into
+          the bank's idle gap before this request, postponed under demand
+          pressure (signed debt bounded by ``ref_postpone_max`` both ways),
+          parallelized with writes (the write-shadow refresh is committed in
+          ``update_ref``, where the write's completion cycle is known); only
+          debt overflowing the window forces a blocking burst.
         """
         if not refresh_mode:
             return vis, None
@@ -125,29 +142,113 @@ def _simulate_controller(policy: int, scheduler: int, n_banks: int,
             jax.lax.dynamic_slice(ref, (hb, zero), (1, L.REF_F))[0], -1, 0) \
             if jnp.ndim(hb) == 0 else jnp.moveaxis(ref[hb], -1, 0)
         busy_end = refb[L.REF_BUSY_UNTIL]
-        # a burst already started by an earlier step still blocks the bank
-        busy_blocks = (vis < busy_end) & (
-            jnp.bool_(refresh_mode == 1) | jnp.bool_(not is_masa)
-            | (hs == refb[L.REF_BUSY_TARGET]))
-        vis = jnp.where(busy_blocks, busy_end, vis)
-        due = refb[L.REF_NEXT_DUE]
-        ref_pending = vis >= due
-        ref_end = due + t.t_rfc
-        ref_target = (due // t.t_refi) % n_subarrays
-        blocks = ref_pending & (jnp.bool_(refresh_mode == 1)
-                                | jnp.bool_(not is_masa)
-                                | (hs == ref_target))
-        vis = jnp.where(blocks, jnp.maximum(vis, ref_end), vis)
-        return vis, dict(pending=ref_pending, end=ref_end, target=ref_target,
-                         due=due)
+        if refresh_mode in (1, 2):
+            # a burst already started by an earlier step still blocks the bank
+            busy_blocks = (vis < busy_end) & (
+                jnp.bool_(refresh_mode == 1) | jnp.bool_(not is_masa)
+                | (hs == refb[L.REF_BUSY_TARGET]))
+            vis = jnp.where(busy_blocks, busy_end, vis)
+            due = refb[L.REF_NEXT_DUE]
+            ref_pending = vis >= due
+            ref_end = due + t.t_rfc
+            ref_target = (due // t.t_refi) % n_subarrays
+            blocks = ref_pending & (jnp.bool_(refresh_mode == 1)
+                                    | jnp.bool_(not is_masa)
+                                    | (hs == ref_target))
+            vis = jnp.where(blocks, jnp.maximum(vis, ref_end), vis)
+            return vis, dict(pending=ref_pending, end=ref_end,
+                             target=ref_target, due=due)
 
-    def update_ref(ref, directive, hb, vis):
-        """Advance the served bank's refresh row (scalar ``hb``/``vis``)."""
+        if refresh_mode in (3, 5):
+            # REFpb / SARP: deadline-fired tRFCpb bursts. SARP gates only
+            # same-subarray requests — subarray-level refresh parallelism
+            # without MASA's designation hardware.
+            sarp = refresh_mode == 5
+            busy_blocks = vis < busy_end
+            if sarp:
+                busy_blocks &= hs == refb[L.REF_BUSY_TARGET]
+            vis = jnp.where(busy_blocks, busy_end, vis)
+            due = refb[L.REF_NEXT_DUE]
+            ref_pending = vis >= due
+            ref_end = due + t.t_rfc_pb
+            ref_target = (due // t.t_refi) % n_subarrays
+            blocks = ref_pending & ((hs == ref_target) if sarp
+                                    else jnp.bool_(True))
+            vis = jnp.where(blocks, jnp.maximum(vis, ref_end), vis)
+            return vis, dict(pending=ref_pending, end=ref_end,
+                             target=ref_target, due=due)
+
+        # mode 4: DARP — dynamic access-refresh parallelization over REFpb.
+        # A matured deadline does NOT stall the bank: the obligation is
+        # postponed (debt) and drained out of the demand stream's way —
+        # eagerly during idle gaps and in write shadows — until the debt
+        # overflows the spec window and forces blocking bursts. The eager
+        # drain is deliberately not an oracle: bursts start back-to-back at
+        # the gap's start without knowing when the next request arrives, so
+        # a straddling burst makes the arrival wait for its remainder.
+        pmax = jnp.int32(t.ref_postpone_max)
+        vis = jnp.where(vis < busy_end, busy_end, vis)   # in-flight burst
+        due, debt = refb[L.REF_NEXT_DUE], refb[L.REF_DEBT]
+        # every tREFI deadline crossed by this request's arrival adds one
+        # owed refresh; the deadline ladder advances past vis in one step
+        crossings = jnp.where(vis >= due, (vis - due) // t.t_refi + 1, 0)
+        owed = debt + crossings
+        new_due = due + crossings * t.t_refi
+        # idle drain: HPCA'14's idle predictor (Sec. 4.2) waits until the
+        # bank's queue has been empty for a while before launching a
+        # pull-in. Modeled as one burst-length of patience: bursts start
+        # back-to-back at gap_start + tRFCpb, so short gaps never launch
+        # (no collision), long gaps absorb refreshes for free, and a
+        # medium gap's straddling burst makes this arrival wait for its
+        # remainder — the predictor is not an oracle.
+        gap_start = jnp.maximum(refb[L.REF_LAST_END], busy_end)
+        launch = gap_start + t.t_rfc_pb          # patience window
+        avail = jnp.maximum(vis - launch, 0)     # idle observed past it
+        n_idle = jnp.minimum(owed,
+                             (avail + t.t_rfc_pb - 1) // t.t_rfc_pb)
+        drain_end = launch + n_idle * t.t_rfc_pb
+        vis = jnp.where(n_idle > 0, jnp.maximum(vis, drain_end), vis)
+        owed = owed - n_idle
+        # postpone: demand requests go first while the debt fits the spec
+        # window; the overflow forces blocking bursts in front of this one
+        n_forced = jnp.maximum(owed - pmax, 0)
+        vis = vis + n_forced * t.t_rfc_pb
+        owed = owed - n_forced
+        chain_end = jnp.where(n_forced > 0, vis, drain_end)
+        # write-refresh parallelization: the core never stalls on a write's
+        # completion, so an owed refresh rides the write burst's shadow
+        # (committed in update_ref, where the write's completion is known).
+        # Gated on the idle drain falling behind (debt >= 2) — HPCA'14's WRP
+        # refreshes during write *drains*, i.e. when demand pressure has
+        # already kept the banks from refreshing in idle time.
+        shadow = hwr & (owed >= 2)
+        pending = (n_idle > 0) | (n_forced > 0) | shadow
+        return vis, dict(pending=pending, due=new_due,
+                         debt=owed - shadow.astype(jnp.int32),
+                         act=((n_idle > 0) | (n_forced > 0)),
+                         end=chain_end, shadow=shadow)
+
+    def update_ref(ref, directive, hb, vis, comp):
+        """Commit the served bank's refresh row (scalar ``hb``/``vis``)."""
         old_row = jax.lax.dynamic_slice(ref, (hb, zero), (1, L.REF_F))[0]
-        served_row = jnp.stack([
-            jnp.maximum(directive["due"] + t.t_refi, vis),
-            directive["end"], directive["target"]])
-        row_new = jnp.where(directive["pending"], served_row, old_row)
+        if refresh_mode == 4:
+            # DARP rows advance unconditionally: the deadline ladder and the
+            # debt carry even when no refresh was performed this step.
+            shadow_end = jnp.where(directive["shadow"], comp + t.t_rfc_pb, 0)
+            busy = jnp.maximum(old_row[L.REF_BUSY_UNTIL],
+                               jnp.maximum(
+                                   jnp.where(directive["act"],
+                                             directive["end"], 0),
+                                   shadow_end))
+            row_new = jnp.stack([
+                directive["due"], busy, zero, directive["debt"],
+                jnp.maximum(old_row[L.REF_LAST_END], comp)])
+        else:
+            served_row = jnp.stack([
+                jnp.maximum(directive["due"] + t.t_refi, vis),
+                directive["end"], directive["target"],
+                old_row[L.REF_DEBT], old_row[L.REF_LAST_END]])
+            row_new = jnp.where(directive["pending"], served_row, old_row)
         return jax.lax.dynamic_update_slice(ref, row_new[None], (hb, zero))
 
     if C == 1:
@@ -176,18 +277,20 @@ def _simulate_controller(policy: int, scheduler: int, n_banks: int,
             vis = jnp.maximum(state["vis_prev"] + hgap,
                               jnp.maximum(jnp.where(hdep, comp_prev, 0),
                                           rob_lim))
-            vis, directive = head_visibility(state.get("ref"), vis, hb, hs)
+            vis, directive = head_visibility(state.get("ref"), vis, hb, hs,
+                                             hwr)
             req = dict(bank=hb, subarray=hs, row=hw, is_write=hwr, vis=vis)
             if refresh_mode:
                 req["ref_pending"] = directive["pending"]
-                req["ref_target"] = directive["target"]
+                req["ref_target"] = directive.get("target", zero)
             new_bank, comp = _engine._timing_step(policy, t, refresh_mode,
                                                   state["bank"], req,
                                                   closed_row=closed_row)
             new = dict(state)
             new["bank"] = new_bank
             if refresh_mode:
-                new["ref"] = update_ref(state["ref"], directive, hb, vis)
+                new["ref"] = update_ref(state["ref"], directive, hb, vis,
+                                        comp)
             new["ring"] = ring.at[i % _RING].set(comp)
             new["vis_prev"] = vis
             new["max_comp"] = jnp.maximum(state["max_comp"], comp)
@@ -236,10 +339,17 @@ def _simulate_controller(policy: int, scheduler: int, n_banks: int,
                           jnp.maximum(
                               jnp.where(h[:, L.RQ_DEP] != 0, comp_prev, 0),
                               rob_lim))
-        vis, directive = head_visibility(state.get("ref"), vis, hb, hs)
+        vis, directive = head_visibility(state.get("ref"), vis, hb, hs,
+                                         h[:, L.RQ_WR] != 0)
 
-        # ---- scheduler: key the live heads, serve the argmin
-        key = request_key(scheduler, bank_st, hb, hs, hw, vis, rank, C, live)
+        # ---- scheduler: key the live heads, serve the argmin.
+        # Under DARP the scheduler is refresh-aware: a bank one postpone
+        # from a forced refresh drains its queued requests first.
+        ref_debt = (state["ref"][hb, L.REF_DEBT] if refresh_mode == 4
+                    else None)
+        key = request_key(scheduler, bank_st, hb, hs, hw, vis, rank, C, live,
+                          ref_debt=ref_debt,
+                          ref_urgent=t.ref_postpone_max - 1)
         c = jnp.argmin(key).astype(jnp.int32)
 
         # ONE gather of the chosen head's fields + step bookkeeping
@@ -255,14 +365,19 @@ def _simulate_controller(policy: int, scheduler: int, n_banks: int,
             is_write=hc[L.RQ_WR] != 0, vis=vis_c,
         )
         if refresh_mode:
-            d4 = jnp.stack([directive["due"], directive["end"],
-                            directive["target"],
-                            directive["pending"].astype(jnp.int32)], axis=1)
-            drow = jax.lax.dynamic_slice(d4, (c, zero), (1, 4))[0]
-            directive_c = dict(due=drow[0], end=drow[1], target=drow[2],
-                               pending=drow[3] != 0)
+            # the chosen head's directive: one gather over the directive's
+            # (mode-dependent, statically known) field set
+            dkeys = sorted(directive)
+            dmat = jnp.stack([directive[k].astype(jnp.int32) for k in dkeys],
+                             axis=1)
+            drow = jax.lax.dynamic_slice(dmat, (c, zero),
+                                         (1, len(dkeys)))[0]
+            directive_c = {k: drow[j] for j, k in enumerate(dkeys)}
+            for k in ("pending", "shadow", "act"):
+                if k in directive_c:
+                    directive_c[k] = directive_c[k] != 0
             req["ref_pending"] = directive_c["pending"]
-            req["ref_target"] = directive_c["target"]
+            req["ref_target"] = directive_c.get("target", zero)
         new_bank, comp = _engine._timing_step(policy, t, refresh_mode,
                                               bank_st, req,
                                               closed_row=closed_row)
@@ -271,7 +386,7 @@ def _simulate_controller(policy: int, scheduler: int, n_banks: int,
         new["bank"] = new_bank
         if refresh_mode:
             new["ref"] = update_ref(state["ref"], directive_c, hc[L.RQ_BANK],
-                                    vis_c)
+                                    vis_c, comp)
         # pc + 1 == ptr[c] + 1: the scan runs exactly C*N steps over C*N
         # requests, so argmin always lands on a live core (dead keys are
         # _DEAD) and the chosen ptr is never clamped by the min() above.

@@ -46,6 +46,7 @@ import jax.numpy as jnp
 
 from repro.core.dram import state_layout as L
 from repro.core.dram.policies import Policy
+from repro.core.dram.refresh import RefreshPolicy
 from repro.core.dram.schedulers import Scheduler
 from repro.core.dram.timing import DramTiming, DDR3_1066
 from repro.core.dram.trace import Trace, to_ideal, stack_traces
@@ -60,13 +61,20 @@ class SimConfig:
     n_banks: int = 8
     n_subarrays: int = 8
     timing: DramTiming = DDR3_1066
-    # Refresh modeling (paper Sec. 6.1 / DSARP, Chang et al. HPCA'14):
-    #   refresh=True: every tREFI each bank runs a tRFC refresh burst.
-    #   dsarp=True (requires MASA): the refresh occupies ONE subarray
-    #   (round-robin); requests to the bank's other subarrays proceed —
-    #   subarray-level parallelism absorbs the refresh penalty.
-    refresh: bool = False
-    dsarp: bool = False
+    # DEPRECATED refresh pair (kept as a shim): ``refresh``/``dsarp`` map onto
+    # the ``refresh_policy`` ladder below (``refresh=True`` == "all_bank",
+    # ``refresh=True, dsarp=True`` == "dsarp"). ``__post_init__`` CONSUMES
+    # them: the policy is canonicalized into ``refresh_policy`` and both
+    # fields are reset to ``None``, so a config built either way is
+    # field-identical (same cache keys, same golden-fixture counters) and
+    # ``dataclasses.replace`` can never smuggle stale derived booleans into
+    # a later canonicalization. An EXPLICIT boolean that contradicts
+    # ``refresh_policy`` — e.g. ``dataclasses.replace(cfg, refresh=False)``
+    # on a refresh-enabled config — raises instead of being silently
+    # re-derived (use ``refresh_policy="none"`` to turn refresh off). Read
+    # ``refresh_policy`` / ``refresh_mode``, never these fields.
+    refresh: bool | None = None
+    dsarp: bool | None = None
     # Row policy (paper Sec. 9.3 sensitivity): "open" keeps rows latched after
     # a column access (row-buffer hits possible); "closed" auto-precharges
     # after every access (no hits, but no conflict serialization either) —
@@ -84,6 +92,45 @@ class SimConfig:
     # here so sweeps treat layout as an ordinary config axis and result-cache
     # keys distinguish mappings. "golden" is the pinned historical default.
     mapping: str = "golden"
+    # Refresh-policy ladder (paper Sec. 6.1; Chang et al. HPCA'14 — see
+    # :mod:`repro.core.dram.refresh` and docs/refresh.md):
+    #   "none"     — refresh off,
+    #   "all_bank" — blocking REFab burst (tRFC) on the per-bank deadline,
+    #   "per_bank" — REFpb: the shorter per-bank burst (tRFCpb),
+    #   "darp"     — REFpb + dynamic pull-in / postpone / write-shadow
+    #                scheduling inside the 8-deep spec window,
+    #   "sarp"     — REFpb occupying ONE subarray; other subarrays of the
+    #                bank proceed even without MASA,
+    #   "dsarp"    — historical DSARP (tRFC burst one subarray at a time;
+    #                only MASA serves around it).
+    refresh_policy: str = "none"
+
+    def __post_init__(self) -> None:
+        # Canonicalize the deprecated boolean pair into refresh_policy and
+        # null the pair, so semantically-equal configs are field-identical:
+        # astuple/asdict — and therefore result-cache keys and vmap bucket
+        # signatures — cannot tell them apart, and replace() round-trips.
+        rp = RefreshPolicy.from_spec(self.refresh_policy)
+        if rp == RefreshPolicy.NONE:
+            if self.refresh:
+                rp = RefreshPolicy.DSARP if self.dsarp else RefreshPolicy.ALL_BANK
+            elif self.dsarp:
+                raise ValueError("dsarp=True requires refresh=True (or use "
+                                 "refresh_policy='dsarp')")
+        else:
+            expect = (True, rp == RefreshPolicy.DSARP)
+            if ((self.refresh is not None and self.refresh != expect[0])
+                    or (self.dsarp is not None and self.dsarp != expect[1])):
+                raise ValueError(
+                    f"refresh_policy={rp.spec!r} conflicts with the "
+                    f"deprecated pair refresh={self.refresh}, "
+                    f"dsarp={self.dsarp}; the booleans are derived from "
+                    f"refresh_policy — drop them, and use "
+                    f"refresh_policy='none'/'dsarp' instead of toggling "
+                    f"refresh/dsarp on an existing config")
+        object.__setattr__(self, "refresh_policy", rp.spec)
+        object.__setattr__(self, "refresh", None)
+        object.__setattr__(self, "dsarp", None)
 
     def geometry_for(self, policy: Policy) -> tuple[int, int]:
         """IDEAL turns every subarray into a real bank."""
@@ -93,8 +140,9 @@ class SimConfig:
 
     @property
     def refresh_mode(self) -> int:
-        """0 = off; 1 = blocking all-bank refresh; 2 = DSARP subarray refresh."""
-        return 0 if not self.refresh else (2 if self.dsarp else 1)
+        """Static engine/controller mode: the ``RefreshPolicy`` enum value
+        (0 off, 1 REFab, 2 DSARP, 3 REFpb, 4 DARP, 5 SARP)."""
+        return int(RefreshPolicy.from_spec(self.refresh_policy))
 
 
 @jax.tree_util.register_dataclass
@@ -282,16 +330,17 @@ def _timing_step(policy: int, t: DramTiming, refresh_mode: int,
     designated_new = s
 
     if refresh_mode:
-        # refresh requires a precharged target: all-bank refresh closes every
-        # row in the bank; DSARP closes only the refreshed subarray. The
-        # due-cycle bookkeeping lives in the controller; this layer only
-        # applies the row closure it directs.
+        # refresh requires a precharged target: bank-granular refresh (REFab
+        # mode 1, REFpb mode 3, DARP mode 4) closes every row in the bank;
+        # subarray-granular refresh (DSARP mode 2, SARP mode 5) closes only
+        # the refreshed subarray. The due-cycle bookkeeping lives in the
+        # controller; this layer only applies the row closure it directs.
         ref_pending, ref_target = req["ref_pending"], req["ref_target"]
-        if refresh_mode == 1:
-            open_row = jnp.where(ref_pending, _NEG, open_row)
-        else:
+        if RefreshPolicy(refresh_mode).subarray_granular:
             open_row = jnp.where(ref_pending & (sidx == ref_target), _NEG,
                                  open_row)
+        else:
+            open_row = jnp.where(ref_pending, _NEG, open_row)
 
     if closed_row:
         # Auto-precharge after every access. The auto-PRE occupies the bank's

@@ -38,6 +38,13 @@ _BIG = jnp.int32(1 << 28)
 #: Key assigned to cores whose stream is exhausted — larger than any live key.
 _DEAD = jnp.int32(2_000_000_000)
 
+#: Refresh-urgency boost (DARP): subtracted from the key of pending requests
+#: to a bank whose postponed-refresh debt is one step from forcing a blocking
+#: burst, so the bank's queue drains before the forced refresh would stall
+#: it. Strictly outranks every tier including TCM's ranking boost; the worst
+#: composed key (TCM latency-sensitive + urgent) stays within int32.
+_REF_URGENT = jnp.int32(4) * _BIG
+
 
 class Scheduler(enum.IntEnum):
     FCFS = 0          # program/arrival order across cores
@@ -55,7 +62,7 @@ ALL_SCHEDULERS = (Scheduler.FCFS, Scheduler.FRFCFS, Scheduler.FRFCFS_SALP,
 
 
 def request_key(scheduler: int, bank_state: dict, hb, hs, hw, vis, rank,
-                n_cores: int, live):
+                n_cores: int, live, ref_debt=None, ref_urgent: int = 0):
     """int32 selection key per core; the controller serves ``argmin``.
 
     ``scheduler`` and ``n_cores`` are static; the rest are traced. The key
@@ -74,6 +81,13 @@ def request_key(scheduler: int, bank_state: dict, hb, hs, hw, vis, rank,
     hit that will not arrive for thousands of cycles must not pre-empt an
     old queued miss (the scan serves requests in bus order, so scheduling a
     far-future request first would stall the channel behind it).
+
+    Refresh awareness (DARP, refresh mode 4 — docs/refresh.md): when the
+    controller passes ``ref_debt`` (the heads' banks' postponed-refresh
+    counters), pending requests to a bank whose debt has reached
+    ``ref_urgent`` (one postpone from a forced refresh) are boosted above
+    every tier, so the bank drains its queue before the forced burst blocks
+    it. Orthogonal to — and composed with — every discipline.
     """
     scheduler = Scheduler(scheduler)
     orow = bank_state["sa"][hb, hs, L.SA_OPEN_ROW]
@@ -93,4 +107,7 @@ def request_key(scheduler: int, bank_state: dict, hb, hs, hw, vis, rank,
         key = key - jnp.where(latency_sensitive, 2 * _BIG, 0)
     else:  # pragma: no cover - enum is exhaustive
         raise ValueError(f"unknown scheduler {scheduler!r}")
+    if ref_debt is not None:
+        urgent = pending & (ref_debt >= jnp.int32(ref_urgent))
+        key = key - jnp.where(urgent, _REF_URGENT, 0)
     return jnp.where(live, key, _DEAD)

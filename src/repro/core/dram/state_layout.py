@@ -70,11 +70,21 @@ CORE_VIS_PREV = 1  # visibility cycle of the core's last served request
 CORE_MAX_COMP = 2  # max completion cycle over the core's served requests
 CORE_F = 3
 
-# ref: [nb, REF_F] per-bank refresh bookkeeping (only when refresh_mode)
+# ref: [nb, REF_F] per-bank refresh bookkeeping (only when refresh_mode).
+# The first three lanes are the historical blocking/DSARP machinery; DEBT and
+# LAST_END serve the per-bank ladder (REFpb / DARP / SARP): DARP's postponed-
+# refresh counter (non-negative: matured-but-unperformed obligations, capped
+# at ``DramTiming.ref_postpone_max`` — overflow forces blocking bursts;
+# ahead-of-deadline pull-in credit is NOT modeled) and the write-drain /
+# idle-gap bookkeeping (end of the bank's last demand activity, so the
+# controller can size the idle window a pull-in or a write-shadow refresh
+# may occupy).
 REF_NEXT_DUE = 0     # staggered tREFI deadline
 REF_BUSY_UNTIL = 1   # end of the in-flight refresh burst
-REF_BUSY_TARGET = 2  # subarray the in-flight burst occupies (DSARP)
-REF_F = 3
+REF_BUSY_TARGET = 2  # subarray the in-flight burst occupies (DSARP/SARP)
+REF_DEBT = 3         # DARP: postponed (owed, >= 0) refresh count
+REF_LAST_END = 4     # DARP: end of the bank's last served demand request
+REF_F = 5
 
 # ---- packed request layouts (controller) -----------------------------------
 # reqs: [C, N, RQ_F] request tensor of the general C-core path — each step

@@ -33,7 +33,18 @@ class DramTiming:
     t_faw: int = 20    # four-activate window
     t_sa: int = 1      # SA_SEL latency (MASA designation before a column command)
     t_refi: int = 4160  # refresh interval (7.8 us @ 533 MHz)
-    t_rfc: int = 160    # refresh cycle time (~300 ns, 8 Gb-class density)
+    t_rfc: int = 160    # all-bank refresh cycle time (~300 ns, 8 Gb-class density)
+    # Per-bank refresh burst (REFpb, LPDDR / DDR4 per-bank refresh; the
+    # REFpb / DARP / SARP ladder of Chang et al. HPCA'14): refreshing one
+    # bank's rows takes ~2.5x less than the all-bank burst at equal density
+    # (tRFCpb ~= 0.4 * tRFCab in the LPDDR3 datasheets HPCA'14 Table 2 cites).
+    t_rfc_pb: int = 64
+    # DDR4/LPDDR spec: up to 8 refresh commands may be postponed as long as
+    # the running debt never exceeds the window — the room DARP's
+    # out-of-order refresh scheduling plays in (debt overflowing the window
+    # forces blocking bursts; the spec's symmetric pull-in-ahead credit is
+    # not modeled — see docs/refresh.md).
+    ref_postpone_max: int = 8
 
     @property
     def t_rc(self) -> int:

@@ -27,13 +27,13 @@ for dependence-free traces; the text format has no dependence column).
 from __future__ import annotations
 
 import dataclasses
-import difflib
 import os
 import zlib
 from typing import IO, Sequence
 
 import numpy as np
 
+from repro.core.dram.errors import did_you_mean
 from repro.core.dram.address_map import (AddressMapping, DEFAULT_MAPPING,
                                          mapping_for)
 from repro.core.dram.timing import CoreModel, DEFAULT_CORE
@@ -115,8 +115,7 @@ def workload(name: str) -> WorkloadProfile:
     try:
         return WORKLOADS_BY_NAME[name]
     except KeyError:
-        close = difflib.get_close_matches(str(name), WORKLOADS_BY_NAME, n=1)
-        hint = f" (did you mean {close[0]!r}?)" if close else ""
+        hint = did_you_mean(str(name), WORKLOADS_BY_NAME)
         raise KeyError(f"unknown workload {name!r}{hint}; expected one of "
                        f"{sorted(WORKLOADS_BY_NAME)}") from None
 

@@ -12,8 +12,8 @@ Two ways to span configurations:
 
 * ``config_axes={"n_subarrays": (1, 2, 4, 8)}`` — cartesian product over
   ``SimConfig`` fields (the Sec. 9.2 sensitivity shape), and/or
-* ``configs=({}, {"refresh": True}, {"refresh": True, "dsarp": True})`` — an
-  explicit list of override dicts (the DSARP refresh-study shape).
+* ``configs=({}, {"refresh_policy": "per_bank"}, {"refresh_policy": "darp"})``
+  — an explicit list of override dicts (the refresh-ladder study shape).
 
 ``where(policy, overrides) -> bool`` prunes cells that make no sense (e.g.
 DSARP under the baseline policy, which is defined to equal blocking refresh).

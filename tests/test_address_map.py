@@ -89,6 +89,19 @@ class TestDecode:
         msg = str(ei.value)
         assert "golden" in msg and "contiguous" in msg and "bits:" in msg
 
+    def test_mapping_for_typo_names_nearest_match(self):
+        """Same near-miss UX as workload(name): a typo'd spec suggests the
+        closest valid mapping instead of only dumping the list."""
+        with pytest.raises(ValueError, match=r"did you mean 'golden'\?"):
+            mapping_for("goldne", NB, NS, RPB)
+        with pytest.raises(ValueError, match=r"did you mean 'contiguous'\?"):
+            mapping_for("contigous", NB, NS, RPB)
+        # nothing close: no hint, but the valid list still appears
+        with pytest.raises(ValueError) as ei:
+            mapping_for("zzzzzz", NB, NS, RPB)
+        assert "did you mean" not in str(ei.value)
+        assert "golden" in str(ei.value)
+
     def test_mapping_for_geometry_mismatch(self):
         m = GoldenRatioMapping(NB, NS, RPB)
         assert mapping_for(m, NB, NS, RPB) is m

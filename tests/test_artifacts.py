@@ -1,0 +1,210 @@
+"""``benchmarks/validate.py`` is the single artifact validator (CI runs the
+same code), so drift between what benchmarks emit and what CI checks is
+caught here, locally, not in a workflow run.
+
+Two layers:
+
+* **synthetic fixtures** — minimal valid documents per suite, built in
+  memory, so every corruption/CLI/guard test runs in ANY checkout
+  (``artifacts/`` is gitignored; real artifacts may be absent);
+* **local artifacts** — when a previous bench run left real artifacts on
+  disk they must validate too (skipped per-file when absent).
+"""
+import copy
+import json
+from pathlib import Path
+
+import pytest
+
+from benchmarks import validate as V
+
+REPO = Path(__file__).resolve().parent.parent
+LOCAL_ARTIFACTS = {
+    "smoke": REPO / "artifacts" / "smoke.json",
+    "mapping": REPO / "artifacts" / "mapping_smoke.json",
+    "perf": REPO / "artifacts" / "BENCH_perf.json",
+    "refresh": REPO / "artifacts" / "refresh.json",
+}
+
+_COMMON = {"schema_version": "repro.bench/v1", "git_sha": "f" * 40, "seed": 7}
+
+
+def _perf_cell(name: str) -> dict:
+    return {"name": name, "n_requests": 2000, "cold_s": 1.0, "warm_s": 0.01,
+            "compile_s": 0.99, "req_per_s": 200000.0}
+
+
+def _refresh_pens(pol: str) -> dict:
+    pens = {"all_bank": 30.0, "per_bank": 10.0, "darp": 4.0, "sarp": 1.0}
+    if pol == "MASA":
+        pens["dsarp"] = 5.0
+    return pens
+
+
+def make_doc(suite: str) -> dict:
+    """A minimal document the suite's checker accepts."""
+    if suite == "smoke":
+        return {**_COMMON,
+                "results": {"smoke": {"ladder_ok": True, "sched_ok": True}},
+                "sweeps": [{"schema_version": "repro.sweep/v1"},
+                           {"schema_version": "repro.sweep/v1",
+                            "kind": "mix_sweep"}]}
+    if suite == "mapping":
+        return {**_COMMON,
+                "results": {"mapping": {
+                    "collapse_ok": True, "recover_ok": True,
+                    "gain_contiguous_MASA": 0.0, "gain_xor_MASA": 30.0,
+                    "footprint_rows": 1024}},
+                "sweeps": [{"grid": {"name": "mapping",
+                                     "footprint_rows": 1024},
+                            "cells": [{"overrides": {"mapping": m}}
+                                      for m in ("contiguous", "golden",
+                                                "xor")]}]}
+    if suite == "perf":
+        return {**_COMMON,
+                "results": {"perf": {
+                    "default_req_per_s": 200000.0, "n_cells": 2,
+                    "cells": [_perf_cell("single/MASA/8x8"),
+                              _perf_cell("batch32/MASA/8x8")]}},
+                "sweeps": []}
+    if suite == "refresh":
+        return {**_COMMON,
+                "results": {"refresh": {
+                    "ladder_ok": True,
+                    "table": {gb: {pol: _refresh_pens(pol)
+                                   for pol in ("BASELINE", "MASA")}
+                              for gb in ("8Gb", "16Gb", "32Gb")}}},
+                "sweeps": [{"grid": {"name": "refresh"}}]}
+    raise AssertionError(suite)
+
+
+# ---------------------------------------------------------------------------
+# Synthetic fixtures: always run.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("suite", sorted(V.SUITES))
+def test_synthetic_doc_validates(suite):
+    msg = V.SUITES[suite](make_doc(suite))
+    assert msg.startswith(f"{suite} ok")
+
+
+@pytest.mark.parametrize("suite", sorted(V.SUITES))
+def test_detect_suite(suite):
+    assert V.detect_suite(make_doc(suite)) == suite
+
+
+@pytest.mark.parametrize("suite", sorted(V.SUITES))
+def test_common_schema_rejections(suite):
+    for field, bad in (("schema_version", "repro.bench/v0"),
+                       ("git_sha", "unknown"), ("seed", None)):
+        broken = copy.deepcopy(make_doc(suite))
+        broken[field] = bad
+        with pytest.raises(V.ValidationError):
+            V.SUITES[suite](broken)
+
+
+def test_smoke_rejects_broken_ladder():
+    doc = make_doc("smoke")
+    doc["results"]["smoke"]["ladder_ok"] = False
+    with pytest.raises(V.ValidationError, match="ladder_ok"):
+        V.validate_smoke(doc)
+
+
+def test_mapping_rejects_collapse_regression():
+    doc = make_doc("mapping")
+    # contiguous "gains" as much as xor => the collapse story is broken
+    doc["results"]["mapping"]["gain_contiguous_MASA"] = \
+        doc["results"]["mapping"]["gain_xor_MASA"]
+    with pytest.raises(V.ValidationError, match="contiguous"):
+        V.validate_mapping(doc)
+
+
+def test_perf_rejects_cell_count_mismatch():
+    doc = make_doc("perf")
+    doc["results"]["perf"]["cells"] = doc["results"]["perf"]["cells"][:-1]
+    with pytest.raises(V.ValidationError, match="n_cells"):
+        V.validate_perf(doc)
+
+
+def test_refresh_rejects_inverted_ladder():
+    doc = make_doc("refresh")
+    pens = doc["results"]["refresh"]["table"]["32Gb"]["MASA"]
+    pens["sarp"] = pens["all_bank"] + 1.0   # sarp "worse" than all_bank
+    with pytest.raises(V.ValidationError, match="ladder violated"):
+        V.validate_refresh(doc)
+
+
+def test_refresh_rejects_summary_side_ladder_lie():
+    """ladder_ok=True with a bad table must still fail: the checker
+    re-derives the ordering from the raw table."""
+    doc = make_doc("refresh")
+    doc["results"]["refresh"]["ladder_ok"] = True
+    for per_pol in doc["results"]["refresh"]["table"].values():
+        for pens in per_pol.values():
+            pens["darp"] = pens["all_bank"] + 5.0
+    with pytest.raises(V.ValidationError, match="ladder violated"):
+        V.validate_refresh(doc)
+
+
+def test_perf_guard_warns_but_does_not_fail(capsys, tmp_path):
+    doc = make_doc("perf")
+    doc["results"]["perf"]["default_req_per_s"] = 1.0   # absurdly slow
+    doc["results"]["perf"]["cells"][0]["req_per_s"] = 1.0
+    p = tmp_path / "slow_perf.json"
+    p.write_text(json.dumps(doc))
+    rc = V.main([str(p), "--suite", "perf", "--perf-guard"])
+    out = capsys.readouterr().out
+    assert rc == 0, "the guard is warn-only, never a failure"
+    assert "::warning" in out and "Perf trajectory" in out
+
+
+def test_perf_guard_quiet_when_healthy(capsys, tmp_path):
+    p = tmp_path / "perf.json"
+    p.write_text(json.dumps(make_doc("perf")))
+    rc = V.main([str(p), "--suite", "perf", "--perf-guard"])
+    out = capsys.readouterr().out
+    assert rc == 0 and "::warning" not in out
+
+
+def test_cli_exit_codes(tmp_path, capsys):
+    ok = tmp_path / "refresh.json"
+    ok.write_text(json.dumps(make_doc("refresh")))
+    assert V.main([str(ok)]) == 0                      # auto-detected suite
+
+    broken = make_doc("refresh")
+    broken["git_sha"] = "unknown"
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps(broken))
+    assert V.main([str(bad)]) == 1                     # invalid artifact
+    assert V.main([str(tmp_path / "missing.json")]) == 1
+    nosuite = tmp_path / "nosuite.json"
+    nosuite.write_text(json.dumps({"results": {}}))
+    assert V.main([str(nosuite)]) == 2                 # cannot detect suite
+    assert V.main([str(ok), "--perf-guard"]) == 2      # guard needs perf
+    capsys.readouterr()
+
+
+def test_cli_maps_truncated_doc_to_exit_1(tmp_path, capsys):
+    """A structurally-truncated artifact (killed bench run) must produce the
+    clean INVALID line + exit 1, not an uncaught KeyError traceback."""
+    doc = make_doc("mapping")
+    del doc["results"]["mapping"]["gain_xor_MASA"]
+    p = tmp_path / "truncated.json"
+    p.write_text(json.dumps(doc))
+    assert V.main([str(p)]) == 1
+    assert "malformed document" in capsys.readouterr().err
+
+
+# ---------------------------------------------------------------------------
+# Local artifacts from real bench runs: validate when present.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("suite", sorted(LOCAL_ARTIFACTS))
+def test_local_artifact_validates(suite):
+    path = LOCAL_ARTIFACTS[suite]
+    if not path.exists():
+        pytest.skip(f"{path.name} not present (artifacts/ is gitignored; "
+                    f"run the {suite} suite to produce it)")
+    with open(path) as f:
+        doc = json.load(f)
+    assert V.SUITES[suite](doc).startswith(f"{suite} ok")

@@ -43,7 +43,9 @@ class TestGridExpansion:
         cells = g.expand()
         # 2 policies x 2 configs minus the pruned baseline+dsarp point
         assert len(cells) == 3
-        assert not any(c.policy == Policy.BASELINE and c.config.dsarp
+        # the shim canonicalized the boolean pair into refresh_policy
+        assert not any(c.policy == Policy.BASELINE
+                       and c.config.refresh_policy == "dsarp"
                        for c in cells)
 
     def test_axes_and_configs_mutually_exclusive(self):

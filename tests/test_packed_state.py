@@ -28,12 +28,29 @@ from repro.core.dram.trace import Trace, WorkloadProfile, stack_traces
 GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "data",
                            "golden_packed_state.json")
 
+#: Refresh-engaged timing for the ladder's fixture cells (see CONFIGS).
+REF_TIMING = dataclasses.replace(
+    SimConfig().timing, t_refi=520, t_rfc=80, t_rfc_pb=32, ref_postpone_max=2)
+
 CONFIGS = {
     "default": dict(),
     "refresh": dict(refresh=True),
     "dsarp": dict(refresh=True, dsarp=True),
     "closed": dict(row_policy="closed"),
     "closed_refresh": dict(refresh=True, row_policy="closed"),
+    # refresh-policy ladder (PR 5). "all_bank"/"dsarp_policy" cells carry
+    # counters COPIED from the "refresh"/"dsarp" cells when the fixture was
+    # extended — the golden file itself pins the deprecation-shim
+    # equivalence bit-for-bit. per_bank/darp/sarp pin the new modes under
+    # REF_TIMING: the fixture traces run ~2-3k cycles, far short of the
+    # default 4160-cycle tREFI, so the default timing would pin nothing —
+    # the shrunk tREFI/window makes every mechanism (deadlines, idle drain,
+    # write shadow, forced overflow) actually fire inside the trace.
+    "all_bank": dict(refresh_policy="all_bank"),
+    "dsarp_policy": dict(refresh_policy="dsarp"),
+    "per_bank": dict(refresh_policy="per_bank", timing=REF_TIMING),
+    "darp": dict(refresh_policy="darp", timing=REF_TIMING),
+    "sarp": dict(refresh_policy="sarp", timing=REF_TIMING),
 }
 
 
@@ -107,10 +124,25 @@ class TestGoldenParity:
         assert single == {(c, p.name) for c in CONFIGS for p in Policy}
         multi = {(c["config"], c["scheduler"], c["policy"])
                  for c in golden["multicore"]}
-        assert multi == {(c, s.name, p.name)
-                         for c in ("default", "refresh", "dsarp")
-                         for s in Scheduler
-                         for p in (Policy.BASELINE, Policy.MASA)}
+        # darp gets the full scheduler product (it feeds the schedulers'
+        # refresh-urgency tier); per_bank/sarp pin the C-core directive
+        # path under FR-FCFS only to bound compile count.
+        full = {(c, s.name, p.name)
+                for c in ("default", "refresh", "dsarp", "darp")
+                for s in Scheduler
+                for p in (Policy.BASELINE, Policy.MASA)}
+        frfcfs_only = {(c, "FRFCFS", p.name)
+                       for c in ("per_bank", "sarp")
+                       for p in (Policy.BASELINE, Policy.MASA)}
+        assert multi == full | frfcfs_only
+
+    def test_shim_configs_equal_policy_configs(self):
+        """The deprecated pair and the refresh_policy spelling are the SAME
+        config — field-identical, so cache keys and buckets cannot differ."""
+        assert (dataclasses.astuple(SimConfig(**CONFIGS["refresh"]))
+                == dataclasses.astuple(SimConfig(**CONFIGS["all_bank"])))
+        assert (dataclasses.astuple(SimConfig(**CONFIGS["dsarp"]))
+                == dataclasses.astuple(SimConfig(**CONFIGS["dsarp_policy"])))
 
 
 # --------------------------------------------------------------------------
@@ -124,6 +156,8 @@ COMBOS = [
     (Policy.MASA, "default"), (Policy.IDEAL, "default"),
     (Policy.MASA, "refresh"), (Policy.MASA, "dsarp"),
     (Policy.BASELINE, "refresh"), (Policy.MASA, "closed"),
+    (Policy.MASA, "per_bank"), (Policy.MASA, "darp"),
+    (Policy.SALP2, "sarp"),
 ]
 
 

@@ -97,3 +97,40 @@ def suite_ipc(traces, policy):
     mpki = np.array([p.mpki for p in PAPER_WORKLOADS])
     instr = nreq * 1000.0 / mpki
     return instr / (total * DEFAULT_CORE.cpu_per_dram), res
+
+
+def command_slice(trace, policy, config, out_path: str) -> dict:
+    """One command-level fidelity cell: export, check, cross-validate, dump.
+
+    Runs the emitting simulation, asserts the stream is legal under the full
+    JEDEC rule table (``check_trace``), asserts the stream alone reproduces
+    the engine's SimResult counters (minus the non-derivable
+    ``sa_open_cycles``), then writes the ramulator-style dump to ``out_path``
+    so CI can re-parse and re-check it (``benchmarks.validate
+    --check-commands``) and upload it next to the JSON artifact.
+    """
+    import dataclasses
+    import hashlib
+    import os
+
+    from repro.core.dram import (check_trace, counters_from_commands,
+                                 simulate_commands)
+    from repro.core.dram.engine import SimResult
+
+    res, ct = simulate_commands(trace, policy, config)
+    chk = check_trace(ct)
+    if not chk.ok:
+        raise AssertionError(f"illegal command stream: {chk.summary()}")
+    got = counters_from_commands(ct)
+    want = {f.name: int(np.asarray(getattr(res, f.name)))
+            for f in dataclasses.fields(SimResult)}
+    want.pop("sa_open_cycles")
+    if got != want:
+        raise AssertionError(
+            f"command stream does not reproduce the engine's counters: "
+            f"{got} != {want}")
+    os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+    ct.dump(out_path)
+    return {"path": out_path, "n_commands": len(ct), "ops": ct.counts(),
+            "n_rules": chk.n_rules, "checker_ok": True,
+            "sha256": hashlib.sha256(ct.dumps().encode()).hexdigest()}

@@ -23,12 +23,17 @@ from __future__ import annotations
 
 import dataclasses
 
-from benchmarks.common import SEED, emit, mem_intensive, per_sim_cell_us, run_grid, timed
-from repro.core.dram import DDR3_1066, Policy
+from benchmarks.common import (SEED, command_slice, emit, mem_intensive,
+                               per_sim_cell_us, run_grid, timed)
+from repro.core.dram import DDR3_1066, Policy, SimConfig, generate_trace
 from repro.experiments import SweepGrid
 
 N = 4000
 SUBSET = mem_intensive(15.0)
+
+#: Command-level fidelity slice: the refresh-dominated corner (32 Gb hot
+#: DARP under MASA) exported + JEDEC-checked + dumped for CI re-validation.
+COMMANDS_OUT = "artifacts/commands_refresh.trace"
 
 #: Density ladder: (tRFC, tRFCpb) in command cycles. 8 Gb matches the
 #: default DDR3 part; 16/32 Gb follow the tRFC growth HPCA'14 projects
@@ -108,7 +113,18 @@ def run() -> dict:
          f"{sarp_vs_dsarp:+.1f}pp(HPCA14:'SARP~=DSARP_without_MASA')")
     if not ladder_ok:
         raise AssertionError(f"refresh ladder ordering violated: {table}")
-    return dict(ladder_ok=ladder_ok, table=table,
+
+    # command-level fidelity: the slice where every refresh mechanism fires
+    # (DARP idle pull-ins, forced bursts, write shadows) — export, check
+    # against the full rule table, cross-validate, dump for CI
+    (cmd, cus) = timed(
+        command_slice, generate_trace(SUBSET[0], N, seed=SEED), Policy.MASA,
+        SimConfig(refresh_policy="darp", timing=_timing("32Gb")),
+        COMMANDS_OUT)
+    emit("refresh.commands", cus,
+         f"n={cmd['n_commands']};rules={cmd['n_rules']};checker_ok")
+
+    return dict(ladder_ok=ladder_ok, table=table, commands=cmd,
                 darp_recovered_pct_32Gb=darp_recovered,
                 sarp_minus_dsarp_pp_32Gb=sarp_vs_dsarp,
                 densities={gb: dict(t_rfc=v[0], t_rfc_pb=v[1])

@@ -9,13 +9,18 @@ scheduler layer and ``run_mix_sweep`` are covered by the same CI cell.
 """
 from __future__ import annotations
 
-from benchmarks.common import SEED, emit, per_sim_cell_us, run_grid, run_mix_grid, timed
-from repro.core.dram import PAPER_WORKLOADS, Policy, Scheduler, workload
+from benchmarks.common import (SEED, command_slice, emit, per_sim_cell_us,
+                               run_grid, run_mix_grid, timed)
+from repro.core.dram import (PAPER_WORKLOADS, Policy, Scheduler, SimConfig,
+                             generate_trace, workload)
 from repro.experiments import MixGrid, SweepGrid
 
 N = 256
 N_MIX = 128
 SUBSET = tuple(p for p in PAPER_WORKLOADS if p.name in ("mcf", "lbm", "gups"))
+
+#: Command-level fidelity slice: dump + re-checkable artifact for CI.
+COMMANDS_OUT = "artifacts/commands_smoke.trace"
 
 
 def make_grid() -> SweepGrid:
@@ -81,8 +86,19 @@ def run() -> dict:
     if not sched_ok:
         raise AssertionError(
             "scheduler mix grid violated conservation or speedup bounds")
+
+    # command-level fidelity: export the MASA+refresh cell's full command
+    # stream, run the JEDEC checker inline, cross-validate its counters
+    # against the engine, and leave the dump for CI to re-check and upload
+    (cmd, cus) = timed(
+        command_slice, generate_trace(workload("mcf"), N, seed=SEED),
+        Policy.MASA, SimConfig(refresh=True), COMMANDS_OUT)
+    emit("smoke.commands", cus,
+         f"n={cmd['n_commands']};rules={cmd['n_rules']};checker_ok")
+
     return {"cells": sweep.stats["n_cells"], "masa_gain_pct": g, "ladder_ok": ok,
-            "sched_cells": mix_sweep.stats["n_cells"], "sched_ok": sched_ok}
+            "sched_cells": mix_sweep.stats["n_cells"], "sched_ok": sched_ok,
+            "commands": cmd}
 
 
 if __name__ == "__main__":

@@ -7,13 +7,20 @@ so validator drift is caught locally before it breaks a workflow run.
 
 Usage::
 
-    python -m benchmarks.validate artifacts/smoke.json --suite smoke
+    python -m benchmarks.validate artifacts/smoke.json --suite smoke \
+        --check-commands artifacts/commands_smoke.trace
     python -m benchmarks.validate artifacts/BENCH_perf.json --suite perf \
         --perf-guard
 
 Suites: ``smoke`` / ``mapping`` / ``perf`` / ``refresh`` (auto-detected from
 the artifact's ``results`` keys when ``--suite`` is omitted). Exit code 0 =
 valid, 1 = validation failed, 2 = bad invocation.
+
+``--check-commands PATH`` re-parses a command-trace dump the bench left next
+to the artifact (``benchmarks.common.command_slice``), re-runs the full
+vectorized JEDEC checker on it from scratch, and pins its sha256 against the
+artifact's ``results.<suite>.commands`` record — so the uploaded trace, the
+checked trace, and the summarized trace are provably the same bytes.
 
 ``--perf-guard`` (perf suite only) additionally compares the artifact's
 ``default_req_per_s`` against the committed seeded reference
@@ -50,6 +57,19 @@ def validate_common(doc: dict) -> None:
     _check(doc.get("seed") is not None, "seed missing")
 
 
+def _validate_commands_record(suite: str, summary: dict) -> None:
+    """Shared checks for a ``results.<suite>.commands`` record, when present.
+
+    Conditional: older artifacts (and the minimal synthetic fixtures) predate
+    the command slice — only a *present but broken* record fails."""
+    cmd = summary.get("commands")
+    if cmd is None:
+        return
+    _check(cmd.get("checker_ok") is True, f"{suite} commands: {cmd}")
+    _check(cmd.get("n_commands", 0) > 0, f"{suite} commands empty: {cmd}")
+    _check(bool(cmd.get("sha256")), f"{suite} commands sha missing: {cmd}")
+
+
 def validate_smoke(doc: dict) -> str:
     validate_common(doc)
     _check(bool(doc.get("sweeps")), "no sweeps recorded")
@@ -60,6 +80,7 @@ def validate_smoke(doc: dict) -> str:
     _check(smoke.get("sched_ok") is True, f"sched_ok: {smoke}")
     _check(any(s.get("kind") == "mix_sweep" for s in doc["sweeps"]),
            "no mix_sweep among sweeps")
+    _validate_commands_record("smoke", smoke)
     return f"smoke ok: {doc['git_sha']} {doc.get('cache_stats')}"
 
 
@@ -138,9 +159,40 @@ def validate_refresh(doc: dict) -> str:
     sweep = next((s for s in doc.get("sweeps", ())
                   if s["grid"]["name"] == "refresh"), None)
     _check(sweep is not None, "refresh sweep missing")
+    _validate_commands_record("refresh", r)
     hi = table["32Gb"]["MASA"]
     return (f"refresh ok: 32Gb MASA all_bank=+{hi['all_bank']:.1f}% "
             f"darp=+{hi['darp']:.1f}% sarp=+{hi['sarp']:.1f}%")
+
+
+def check_commands_file(path: str, doc: dict | None = None,
+                        suite: str | None = None) -> str:
+    """Re-parse a command-trace dump and re-run the JEDEC checker on it.
+
+    Independent of the bench process that wrote it: the dump text carries
+    the policy/timing/geometry meta, so the rule table is re-derived from
+    the file alone. When the artifact carries a ``commands`` record, the
+    file's sha256 must match it (same bytes the bench summarized)."""
+    import hashlib
+
+    from repro.core.dram import check_trace
+    from repro.core.dram.commands import CommandTrace
+
+    try:
+        ct = CommandTrace.load(path)
+    except (OSError, ValueError) as e:
+        raise ValidationError(f"command trace {path} unreadable: {e}")
+    result = check_trace(ct)
+    _check(result.ok, f"command trace {path}: {result.summary()}")
+    sha = hashlib.sha256(ct.dumps().encode()).hexdigest()
+    rec = (((doc or {}).get("results") or {}).get(suite or "") or {}) \
+        .get("commands")
+    if rec is not None:
+        _check(rec.get("sha256") == sha,
+               f"command trace {path} sha {sha[:12]} != artifact record "
+               f"{str(rec.get('sha256'))[:12]}")
+    return (f"{len(ct)} commands legal under {result.n_rules} rules"
+            + ("" if rec is None else ", sha pinned"))
 
 
 SUITES: dict[str, Callable[[dict], str]] = {
@@ -164,6 +216,10 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--perf-guard", action="store_true",
                     help="perf only: warn-only trajectory comparison against "
                          "the committed seeded reference")
+    ap.add_argument("--check-commands", metavar="PATH", default=None,
+                    help="re-parse a command-trace dump, re-run the JEDEC "
+                         "checker, and pin its sha against the artifact's "
+                         "commands record")
     args = ap.parse_args(argv)
 
     try:
@@ -186,6 +242,9 @@ def main(argv: list[str] | None = None) -> int:
     try:
         msg = (validate_perf(doc, guard=True) if suite == "perf"
                and args.perf_guard else SUITES[suite](doc))
+        if args.check_commands:
+            msg += "; commands: " + check_commands_file(
+                args.check_commands, doc, suite)
     except ValidationError as e:
         print(f"INVALID {args.artifact} [{suite}]: {e}", file=sys.stderr)
         return 1

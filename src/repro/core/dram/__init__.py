@@ -30,6 +30,11 @@ The simulator is layered (see docs/architecture.md):
                         step shared by single- and multi-core simulation.
   * ``schedulers.py`` — pluggable request schedulers (``Scheduler``): FCFS,
                         FR-FCFS, FR-FCFS+SALP-aware, TCM ranking.
+  * ``commands.py``   — DRAM command-stream export (``simulate_commands``):
+                        the same scan, with a per-step packed command log
+                        decoded to a ``CommandTrace`` (docs/commands.md).
+  * ``checker.py``    — vectorized JEDEC timing-rule checker
+                        (``check_trace``) over exported command streams.
 """
 from repro.core.dram.timing import DramTiming, EnergyModel, CoreModel, DDR3_1066, DEFAULT_ENERGY, DEFAULT_CORE
 from repro.core.dram.policies import Policy
@@ -46,6 +51,12 @@ from repro.core.dram.trace import (WorkloadProfile, Trace, generate_trace,
 from repro.core.dram.engine import (simulate, simulate_batch, simulate_stacked,
                                     SimConfig, SimResult)
 from repro.core.dram.metrics import ipc_from_result, energy_from_result, summarize
+from repro.core.dram.commands import (CommandTrace, simulate_commands,
+                                      simulate_mix_commands,
+                                      completions_from_commands,
+                                      counters_from_commands)
+from repro.core.dram.checker import (TimingRule, Violation, CheckResult,
+                                     rules_for, check_trace, min_legal_cycles)
 
 __all__ = [
     "DramTiming", "EnergyModel", "CoreModel", "DDR3_1066", "DEFAULT_ENERGY", "DEFAULT_CORE",
@@ -57,4 +68,8 @@ __all__ = [
     "WORKLOADS_BY_NAME", "workload", "stack_traces", "ROW_SPACE_STRIDE",
     "simulate", "simulate_batch", "simulate_stacked", "SimConfig", "SimResult",
     "ipc_from_result", "energy_from_result", "summarize",
+    "CommandTrace", "simulate_commands", "simulate_mix_commands",
+    "completions_from_commands", "counters_from_commands",
+    "TimingRule", "Violation", "CheckResult", "rules_for", "check_trace",
+    "min_legal_cycles",
 ]

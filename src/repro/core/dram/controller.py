@@ -89,15 +89,26 @@ def _refresh_due0(nb: int, t_refi: int) -> jax.Array:
 @functools.partial(jax.jit, static_argnames=("policy", "scheduler", "n_banks",
                                              "n_subarrays", "timing",
                                              "refresh_mode", "closed_row",
-                                             "unroll"))
+                                             "emit_commands", "unroll"))
 def _simulate_controller(policy: int, scheduler: int, n_banks: int,
                          n_subarrays: int, timing: DramTiming,
                          refresh_mode: int,
                          bank, subarray, row, is_write, gap, dep,  # [C, N]
                          mlp_window, rank,                         # [C]
                          closed_row: bool = False,
+                         emit_commands: bool = False,
                          unroll: int = _SCAN_UNROLL):
-    """Scan C*N controller steps; returns (SimResult, per-core max completion)."""
+    """Scan C*N controller steps; returns (SimResult, per-core max completion).
+
+    With the static ``emit_commands`` flag a third element is returned: the
+    scan's stacked per-step command log — ``dict(cmds=[steps, slots, CMD_F],
+    comp=[steps], core=[steps], req=[steps])`` — which
+    :mod:`repro.core.dram.commands` decodes into a :class:`CommandTrace`.
+    The engine's slots are extended with the refresh commands this layer
+    issues (``OP_REF``; DARP emits its idle-drain / forced / write-shadow
+    burst chains as separate slots, chain length in the aux lane). The flag
+    off is the exact historical trace — emission is pure Python branching.
+    """
     t = timing
     C, N = bank.shape
     is_masa = policy == Policy.MASA
@@ -212,6 +223,7 @@ def _simulate_controller(policy: int, scheduler: int, n_banks: int,
         # postpone: demand requests go first while the debt fits the spec
         # window; the overflow forces blocking bursts in front of this one
         n_forced = jnp.maximum(owed - pmax, 0)
+        forced_at = vis                          # forced chain start cycle
         vis = vis + n_forced * t.t_rfc_pb
         owed = owed - n_forced
         chain_end = jnp.where(n_forced > 0, vis, drain_end)
@@ -223,10 +235,18 @@ def _simulate_controller(policy: int, scheduler: int, n_banks: int,
         # already kept the banks from refreshing in idle time.
         shadow = hwr & (owed >= 2)
         pending = (n_idle > 0) | (n_forced > 0) | shadow
-        return vis, dict(pending=pending, due=new_due,
-                         debt=owed - shadow.astype(jnp.int32),
-                         act=((n_idle > 0) | (n_forced > 0)),
-                         end=chain_end, shadow=shadow)
+        d = dict(pending=pending, due=new_due,
+                 debt=owed - shadow.astype(jnp.int32),
+                 act=((n_idle > 0) | (n_forced > 0)),
+                 end=chain_end, shadow=shadow)
+        if emit_commands:
+            # burst-chain geometry for the command log: extra int lanes ride
+            # the directive (they survive the C-core gather; update_ref
+            # ignores them). The shadow burst's start is the write's
+            # completion — known only after the timing step (ref_cmds).
+            d.update(n_idle=n_idle, launch=launch,
+                     n_forced=n_forced, forced_at=forced_at)
+        return vis, d
 
     def update_ref(ref, directive, hb, vis, comp):
         """Commit the served bank's refresh row (scalar ``hb``/``vis``)."""
@@ -250,6 +270,34 @@ def _simulate_controller(policy: int, scheduler: int, n_banks: int,
                 old_row[L.REF_DEBT], old_row[L.REF_LAST_END]])
             row_new = jnp.where(directive["pending"], served_row, old_row)
         return jax.lax.dynamic_update_slice(ref, row_new[None], (hb, zero))
+
+    def ref_cmds(directive, hb, comp):
+        """[R, CMD_F] OP_REF slots for the served step (emit_commands only).
+
+        Modes 1/2/3/5 fire at most one burst per step, at the deadline
+        (interval ``[due, end)``); subarray-granular modes carry the target
+        subarray, bank-granular ones NEG. DARP fires up to three *chains*
+        (idle drain / forced overflow / write shadow) whose lengths ride the
+        aux lane — decode expands a chain of k into k bursts spaced tRFCpb.
+        """
+        i32 = lambda x: jnp.asarray(x, jnp.int32)  # noqa: E731
+
+        def rec(cond, cycle, sa_i, aux):
+            return jnp.stack([jnp.where(cond, jnp.int32(L.OP_REF),
+                                        jnp.int32(L.OP_NOP)),
+                              i32(cycle), i32(hb), i32(sa_i), _NEG, i32(aux)])
+
+        if refresh_mode != 4:
+            target = (directive["target"] if refresh_mode in (2, 5) else _NEG)
+            return rec(directive["pending"], directive["due"], target,
+                       jnp.int32(1))[None]
+        return jnp.stack([
+            rec(directive["n_idle"] > 0, directive["launch"], _NEG,
+                directive["n_idle"]),
+            rec(directive["n_forced"] > 0, directive["forced_at"], _NEG,
+                directive["n_forced"]),
+            rec(directive["shadow"], comp, _NEG, jnp.int32(1)),
+        ])
 
     if C == 1:
         # ---- single-core fast path --------------------------------------
@@ -283,9 +331,11 @@ def _simulate_controller(policy: int, scheduler: int, n_banks: int,
             if refresh_mode:
                 req["ref_pending"] = directive["pending"]
                 req["ref_target"] = directive.get("target", zero)
-            new_bank, comp = _engine._timing_step(policy, t, refresh_mode,
-                                                  state["bank"], req,
-                                                  closed_row=closed_row)
+            stepped = _engine._timing_step(policy, t, refresh_mode,
+                                           state["bank"], req,
+                                           closed_row=closed_row,
+                                           emit=emit_commands)
+            new_bank, comp = stepped[0], stepped[1]
             new = dict(state)
             new["bank"] = new_bank
             if refresh_mode:
@@ -294,14 +344,21 @@ def _simulate_controller(policy: int, scheduler: int, n_banks: int,
             new["ring"] = ring.at[i % _RING].set(comp)
             new["vis_prev"] = vis
             new["max_comp"] = jnp.maximum(state["max_comp"], comp)
-            return new, None
+            if not emit_commands:
+                return new, None
+            cmds = stepped[2]
+            if refresh_mode:
+                cmds = jnp.concatenate([cmds, ref_cmds(directive, hb, comp)])
+            return new, dict(cmds=cmds, comp=comp, core=zero, req=i)
 
         xs = jnp.stack([jnp.arange(N, dtype=jnp.int32), bank[0], subarray[0],
                         row[0], is_write[0].astype(jnp.int32), gap[0],
                         dep[0].astype(jnp.int32)], axis=1)   # [N, XS_F]
-        final, _ = jax.lax.scan(step1, state0, xs, unroll=unroll)
+        final, ys = jax.lax.scan(step1, state0, xs, unroll=unroll)
         res = _engine.result_from_state(N, final["bank"]["scalars"],
                                         final["vis_prev"])
+        if emit_commands:
+            return res, final["max_comp"][None], ys
         return res, final["max_comp"][None]
 
     # ---- general C-core path --------------------------------------------
@@ -378,9 +435,10 @@ def _simulate_controller(policy: int, scheduler: int, n_banks: int,
                     directive_c[k] = directive_c[k] != 0
             req["ref_pending"] = directive_c["pending"]
             req["ref_target"] = directive_c.get("target", zero)
-        new_bank, comp = _engine._timing_step(policy, t, refresh_mode,
-                                              bank_st, req,
-                                              closed_row=closed_row)
+        stepped = _engine._timing_step(policy, t, refresh_mode, bank_st, req,
+                                       closed_row=closed_row,
+                                       emit=emit_commands)
+        new_bank, comp = stepped[0], stepped[1]
 
         new = dict(state)
         new["bank"] = new_bank
@@ -395,9 +453,19 @@ def _simulate_controller(policy: int, scheduler: int, n_banks: int,
         new["core"] = jax.lax.dynamic_update_slice(core, core_row[None],
                                                    (c, zero))
         new["comp_ring"] = state["comp_ring"].at[c, pc % _RING].set(comp)
-        return new, None
+        if not emit_commands:
+            return new, None
+        # emission follows the CHOSEN head only (the step serves one request;
+        # update_ref commits the same head's refresh row)
+        cmds = stepped[2]
+        if refresh_mode:
+            cmds = jnp.concatenate(
+                [cmds, ref_cmds(directive_c, hc[L.RQ_BANK], comp)])
+        return new, dict(cmds=cmds, comp=comp, core=c, req=pc)
 
-    final, _ = jax.lax.scan(step, state0, None, length=C * N, unroll=unroll)
+    final, ys = jax.lax.scan(step, state0, None, length=C * N, unroll=unroll)
     res = _engine.result_from_state(
         C * N, final["bank"]["scalars"], final["core"][:, L.CORE_VIS_PREV])
+    if emit_commands:
+        return res, final["core"][:, L.CORE_MAX_COMP], ys
     return res, final["core"][:, L.CORE_MAX_COMP]

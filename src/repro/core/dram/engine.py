@@ -104,6 +104,14 @@ class SimConfig:
     #   "dsarp"    — historical DSARP (tRFC burst one subarray at a time;
     #                only MASA serves around it).
     refresh_policy: str = "none"
+    # Command-stream export (docs/commands.md): when True, the controller
+    # scan additionally emits the packed per-step command log that
+    # :mod:`repro.core.dram.commands` decodes into a CommandTrace and
+    # :mod:`repro.core.dram.checker` verifies against the JEDEC rule table.
+    # A *static* axis (new compiled program), consumed by the
+    # ``simulate_commands`` entry points; the default-off path traces the
+    # exact op graph it always did — bit-identical results, zero overhead.
+    emit_commands: bool = False
 
     def __post_init__(self) -> None:
         # Canonicalize the deprecated boolean pair into refresh_policy and
@@ -183,7 +191,7 @@ def _bank_state0(nb: int, ns: int) -> dict:
 
 def _timing_step(policy: int, t: DramTiming, refresh_mode: int,
                  state: dict, req: dict,
-                 closed_row: bool = False) -> tuple[dict, jax.Array]:
+                 closed_row: bool = False, emit: bool = False):
     """Serve one scheduled request against the bank state; return completion.
 
     ``req`` carries the request fields (``bank/subarray/row/is_write``), the
@@ -200,6 +208,13 @@ def _timing_step(policy: int, t: DramTiming, refresh_mode: int,
     exactly ONE ``dynamic_update_slice`` out. Every conditional update is
     an unconditional write of ``jnp.where(cond, new, old)`` — never a
     ``where`` over a full array copy.
+
+    ``emit`` (static, default off) additionally returns a packed
+    ``[slots, CMD_F]`` int32 command-log block (state_layout ``CMD_*`` /
+    ``OP_*``) — one slot per command the step may issue, ``OP_NOP`` marking
+    the unused ones. The gate is a pure Python branch: the ``emit=False``
+    path traces exactly the ops it always did (bit-identical results, no
+    perf cost). Decode lives in :mod:`repro.core.dram.commands`.
     """
     b, s, w = req["bank"], req["subarray"], req["row"]
     is_wr, vis = req["is_write"], req["vis"]
@@ -391,7 +406,34 @@ def _timing_step(policy: int, t: DramTiming, refresh_mode: int,
     new = dict(state)
     new["sa"] = new_sa
     new["act_hist"], new["scalars"] = act_hist, new_sc
-    return new, comp
+    if not emit:
+        return new, comp
+
+    # ---- packed command-log block (SimConfig.emit_commands) ----------------
+    # One [CMD_F] row per command slot; a slot whose condition is off carries
+    # OP_NOP. The issue cycles are exactly the t_* this step computed, so the
+    # log IS the timing math — commands.decode flattens it and checker.py
+    # re-verifies it against the declarative JEDEC rule table.
+    def rec(cond, op, cycle, sa_i, row_i, aux=zero):
+        return jnp.stack([jnp.where(cond, i32(op), jnp.int32(L.OP_NOP)),
+                          i32(cycle), i32(b), i32(sa_i), i32(row_i), i32(aux)])
+
+    slots = [
+        # The other subarray's PRE may target a row the refresh machinery
+        # already closed (open_row == NEG): the controller tracks BK_OPEN_SA,
+        # not the closure, so the (harmless) PRE is still issued.
+        rec(pre_other_needed, L.OP_PRE, t_pre_other, so, oth[L.SA_OPEN_ROW]),
+        rec(pre_own_needed, L.OP_PRE, t_pre_own, s, orow),
+        rec(act_needed, L.OP_ACT, t_act, s, w),
+        # SA_SEL completes t_sa before the column command it redirects
+        rec(sasel_needed, L.OP_SASEL, t_col - t.t_sa, s, _NEG),
+        rec(jnp.bool_(True),
+            jnp.where(is_wr, jnp.int32(L.OP_WR), jnp.int32(L.OP_RD)),
+            t_col, s, w, aux=vis),
+    ]
+    if closed_row:
+        slots.append(rec(jnp.bool_(True), L.OP_PREA, auto_pre, s, w))
+    return new, comp, jnp.stack(slots)
 
 
 def _controller_args(policy: Policy, config: SimConfig):
@@ -418,6 +460,11 @@ def simulate(trace: Trace, policy: Policy, config: SimConfig = SimConfig()) -> S
     """Simulate one trace under one policy (a 1-core controller instance)."""
     from repro.core.dram import controller  # deferred: controller builds on this layer
 
+    if config.emit_commands:
+        raise ValueError(
+            "SimConfig.emit_commands is consumed by the command-export entry "
+            "points — use repro.core.dram.commands.simulate_commands "
+            "(simulate() would silently drop the log)")
     controller.validate_mlp_window(trace.mlp_window)
     eff, sched, nb, ns = _controller_args(policy, config)
     tr = to_ideal(trace, config.n_banks, config.n_subarrays) if policy == Policy.IDEAL else trace

@@ -107,3 +107,32 @@ RQ_EXT_F = 9
 XS_IDX = 0
 XS_BANK, XS_SA, XS_ROW, XS_WR, XS_GAP, XS_DEP = range(1, 7)
 XS_F = 7
+
+# ---- packed command-log records (emit_commands) -----------------------------
+# When ``SimConfig.emit_commands`` is on, every controller scan step emits a
+# fixed block of ``[slots, CMD_F]`` int32 records (one slot per command the
+# step *may* issue; unused slots carry OP_NOP). The slot count is static per
+# (closed_row, refresh_mode) configuration; :mod:`repro.core.dram.commands`
+# decodes the stacked ``[steps, slots, CMD_F]`` output into a flat
+# :class:`CommandTrace`. Opcodes are plain ints here so the engine/controller
+# never import the (host-side) commands module; ``commands.CommandOp`` wraps
+# the same values.
+CMD_OP = 0      # OP_* opcode (OP_NOP = unused slot)
+CMD_CYCLE = 1   # issue cycle of the command
+CMD_BANK = 2
+CMD_SA = 3      # subarray; NEG for bank-granular REF bursts
+CMD_ROW = 4     # row id (ACT/COL); NEG when the slot has no row meaning
+CMD_AUX = 5     # RD/WR: the request's visibility cycle; REF: burst-chain
+                # length (DARP drains fire several back-to-back bursts in one
+                # step — decode expands the chain); 0 otherwise
+CMD_F = 6
+
+OP_NOP = 0
+OP_ACT = 1
+OP_PRE = 2      # explicit precharge (counted in SimResult.n_pre)
+OP_PREA = 3     # closed-row auto-precharge (folded into the access; NOT
+                # counted in n_pre — see engine._timing_step)
+OP_RD = 4
+OP_WR = 5
+OP_SASEL = 6    # MASA SA_SEL designation change before a column command
+OP_REF = 7      # refresh-burst start (bank- or subarray-granular per mode)

@@ -9,6 +9,15 @@ between ACTIVATEs to *different subarrays of the same bank* (Section 5.1 of the
 ISCA'12 paper introduces a constraint of this kind to bound peak current);
 ``t_sa`` is the SA_SEL command latency MASA adds before a column command when
 the designated subarray changes.
+
+Every constant below is *enforced* by the engine/controller timing math and
+*independently validated* at command granularity: the checker's declarative
+rule table (``repro.core.dram.checker.rules_for``) re-derives each JEDEC
+constraint — tRCD/tRP/tRAS/tWR/tRTP/tCCD/tWTR/tRTW/tRRD/tRRD_sa/tFAW plus
+the refresh cadences — from these fields and verifies exported command
+streams against them (docs/commands.md carries the per-rule provenance
+table). A timing constant that drifted out of sync with the engine's
+behaviour fails the command-level CI checks, not just our own fixtures.
 """
 from __future__ import annotations
 

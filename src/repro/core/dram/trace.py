@@ -23,6 +23,13 @@ stream under a different layout. :meth:`Trace.from_file` ingests
 ramulator/DRAMSim-style ``cycle addr R|W`` text traces through the same
 decode path, and :meth:`Trace.dump` writes one back (the round trip is exact
 for dependence-free traces; the text format has no dependence column).
+
+This is the *request*-side text format (``# repro-trace v1``). The
+*command*-side twin — the DRAM command stream a simulation actually issued
+(ACT/PRE/RD/WR/REF with issue cycles) — is
+:meth:`repro.core.dram.commands.CommandTrace.dump` (``# repro-cmds v1``),
+re-checkable against the JEDEC rule table from the file alone
+(docs/commands.md).
 """
 from __future__ import annotations
 

@@ -1,0 +1,84 @@
+"""Regenerate ``tests/data/golden_commands.json`` (the command-stream pins).
+
+NOT a test module (no ``test_`` prefix — pytest must not collect it). Run
+
+    PYTHONPATH=src python tests/make_golden_commands.py
+
+after an *intentional* command-semantics change, then eyeball the diff: every
+changed sha means the emitted stream changed for that cell, which is a
+timing-visible event, never noise. The cell grid mirrors
+``test_packed_state.CONFIGS`` so the command log is pinned over exactly the
+same (config x policy) surface as the counter fixture.
+
+Every cell is also run through the checker here — a regeneration that would
+pin an illegal stream fails loudly instead of poisoning the fixture.
+"""
+import hashlib
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))
+
+from test_packed_state import CONFIGS, random_trace  # noqa: E402
+
+from repro.core.dram import (ROW_SPACE_STRIDE, Policy, Scheduler, SimConfig,
+                             check_trace, generate_trace,
+                             simulate_commands, simulate_mix_commands,
+                             workload)
+
+OUT = os.path.join(os.path.dirname(__file__), "data", "golden_commands.json")
+
+#: Cells whose FULL dump text is embedded (byte-for-byte pin, not just a
+#: digest): one plain cell, one closed-row + refresh cell, one per-bank
+#: ladder cell — together they exercise every opcode the format can carry.
+TEXT_CELLS = [("default", "MASA"), ("closed_refresh", "SALP2"),
+              ("darp", "BASELINE")]
+
+SINGLE_SEED, MIX_SEED = 3, 5
+MIX_CONFIGS = ("default", "darp")
+MIX_POLICIES = (Policy.BASELINE, Policy.MASA)
+
+
+def cell(ct) -> dict:
+    text = ct.dumps()
+    return {"sha256": hashlib.sha256(text.encode()).hexdigest(),
+            "n_commands": len(ct), "ops": ct.counts()}
+
+
+def main() -> None:
+    single, texts = [], {}
+    for cfg_name in CONFIGS:
+        cfg = SimConfig(**CONFIGS[cfg_name])
+        for pol in Policy:
+            _, ct = simulate_commands(random_trace(SINGLE_SEED), pol, cfg)
+            r = check_trace(ct)
+            assert r.ok, f"{cfg_name}/{pol.name} regeneration: {r.summary()}"
+            single.append({"seed": SINGLE_SEED, "config": cfg_name,
+                           "policy": pol.name, **cell(ct)})
+            if (cfg_name, pol.name) in TEXT_CELLS:
+                texts[f"{cfg_name}/{pol.name}"] = ct.dumps()
+    multicore = []
+    mix = [generate_trace(workload(m), 120, seed=MIX_SEED,
+                          row_space_offset=ROW_SPACE_STRIDE * i)
+           for i, m in enumerate(("mcf", "lbm"))]
+    for cfg_name in MIX_CONFIGS:
+        for pol in MIX_POLICIES:
+            cfg = SimConfig(scheduler=Scheduler.FRFCFS, **CONFIGS[cfg_name])
+            _, ct = simulate_mix_commands(mix, pol, cfg)
+            r = check_trace(ct)
+            assert r.ok, f"mix {cfg_name}/{pol.name}: {r.summary()}"
+            multicore.append({"seed": MIX_SEED, "config": cfg_name,
+                              "scheduler": "FRFCFS", "policy": pol.name,
+                              **cell(ct)})
+    with open(OUT, "w") as f:
+        json.dump({"comment": "regenerate with tests/make_golden_commands.py",
+                   "single": single, "multicore": multicore, "texts": texts},
+                  f, indent=1)
+        f.write("\n")
+    print(f"wrote {OUT}: {len(single)} single + {len(multicore)} multicore "
+          f"cells, {len(texts)} full texts")
+
+
+if __name__ == "__main__":
+    main()

@@ -196,6 +196,80 @@ def test_cli_maps_truncated_doc_to_exit_1(tmp_path, capsys):
 
 
 # ---------------------------------------------------------------------------
+# Command-trace re-validation (--check-commands): the CI path end to end.
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def command_dump(tmp_path_factory):
+    """A real (tiny) command-trace dump + the matching artifact record."""
+    from benchmarks.common import command_slice
+    from repro.core.dram import Policy, SimConfig, generate_trace, workload
+
+    path = tmp_path_factory.mktemp("cmds") / "commands_smoke.trace"
+    rec = command_slice(generate_trace(workload("mcf"), 96, seed=7),
+                        Policy.MASA, SimConfig(refresh=True), str(path))
+    return path, rec
+
+
+def test_check_commands_file_ok(command_dump):
+    path, rec = command_dump
+    doc = make_doc("smoke")
+    doc["results"]["smoke"]["commands"] = rec
+    assert V.validate_smoke(doc).startswith("smoke ok")
+    msg = V.check_commands_file(str(path), doc, "smoke")
+    assert "legal" in msg and "sha pinned" in msg
+
+
+def test_check_commands_cli_exit_codes(command_dump, tmp_path, capsys):
+    path, rec = command_dump
+    doc = make_doc("smoke")
+    doc["results"]["smoke"]["commands"] = rec
+    art = tmp_path / "smoke.json"
+    art.write_text(json.dumps(doc))
+    assert V.main([str(art), "--suite", "smoke",
+                   "--check-commands", str(path)]) == 0
+    # a trace whose bytes drifted from the artifact record must fail
+    doc["results"]["smoke"]["commands"] = {**rec, "sha256": "0" * 64}
+    art.write_text(json.dumps(doc))
+    assert V.main([str(art), "--suite", "smoke",
+                   "--check-commands", str(path)]) == 1
+    assert V.main([str(art), "--suite", "smoke", "--check-commands",
+                   str(tmp_path / "missing.trace")]) == 1
+    capsys.readouterr()
+
+
+def test_check_commands_catches_timing_violation(command_dump, tmp_path):
+    """An illegal stream (a command rewound below its bound) must fail the
+    re-check even when its sha is not pinned — the checker itself is the
+    gate, not just the byte pin."""
+    import numpy as np
+
+    from repro.core.dram import min_legal_cycles
+    from repro.core.dram import state_layout as L
+    from repro.core.dram.commands import CommandTrace
+
+    path, _ = command_dump
+    ct = CommandTrace.load(str(path))
+    bound = min_legal_cycles(ct)
+    i = int(np.flatnonzero((ct.cycle > bound) & (bound > 0)
+                           & (ct.op != L.OP_REF))[0])
+    ct.cycle[i] = bound[i] - 1
+    bad = tmp_path / "bad.trace"
+    ct.dump(str(bad))
+    with pytest.raises(V.ValidationError, match="violation"):
+        V.check_commands_file(str(bad))
+
+
+def test_broken_commands_record_rejected():
+    doc = make_doc("smoke")
+    doc["results"]["smoke"]["commands"] = {"checker_ok": False,
+                                           "n_commands": 5,
+                                           "sha256": "ab" * 32}
+    with pytest.raises(V.ValidationError, match="commands"):
+        V.validate_smoke(doc)
+
+
+# ---------------------------------------------------------------------------
 # Local artifacts from real bench runs: validate when present.
 # ---------------------------------------------------------------------------
 
@@ -208,3 +282,23 @@ def test_local_artifact_validates(suite):
     with open(path) as f:
         doc = json.load(f)
     assert V.SUITES[suite](doc).startswith(f"{suite} ok")
+
+
+LOCAL_COMMAND_TRACES = {
+    "smoke": REPO / "artifacts" / "commands_smoke.trace",
+    "refresh": REPO / "artifacts" / "commands_refresh.trace",
+}
+
+
+@pytest.mark.parametrize("suite", sorted(LOCAL_COMMAND_TRACES))
+def test_local_command_trace_validates(suite):
+    """Re-check command dumps a local bench run left behind, exactly as the
+    CI --check-commands step does (sha pin included when the JSON artifact
+    is present too)."""
+    trace = LOCAL_COMMAND_TRACES[suite]
+    if not trace.exists():
+        pytest.skip(f"{trace.name} not present (artifacts/ is gitignored; "
+                    f"run the {suite} suite to produce it)")
+    art = LOCAL_ARTIFACTS[suite]
+    doc = json.load(open(art)) if art.exists() else None
+    assert "legal" in V.check_commands_file(str(trace), doc, suite)

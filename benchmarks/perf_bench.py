@@ -3,18 +3,26 @@
 Measures requests-simulated/sec and the compile-vs-run split of the
 packed-state controller scan across policies x geometries x core counts,
 plus the scan ``unroll`` sweep that justifies the tuned default
-(``controller._SCAN_UNROLL``). Everything runs on small CPU-friendly cells
-so the suite is CI-viable.
+(``controller._SCAN_UNROLL``) and a **backend axis** (packed scan vs the
+fused Pallas kernels of ``repro.core.dram.pallas_step``; the compiled
+``pallas`` backend joins automatically when a TPU is attached, the
+``pallas-interpret`` CI leg always runs). A per-step microbenchmark
+(ns/step at two trace lengths per backend) makes kernel/block tuning
+reproducible instead of anecdotal. Everything runs on small CPU-friendly
+cells so the suite is CI-viable.
 
 Besides the usual CSV rows, ``run()`` writes ``artifacts/BENCH_perf.json``
 — a standalone ``repro.bench/v1`` artifact (git SHA + seed embedded) that
 is THE perf trajectory: every future perf PR reruns this suite and is
 judged against the previous artifact's ``req_per_s`` numbers. The
+``trajectory`` field carries the committed predecessors' summary points
+forward (each run appends the artifact it replaces), and the
 ``ref_req_per_s`` fields pin the pre-packed-state engine (commit 37b6d6b,
 same host class) as the trajectory's origin point.
 """
 from __future__ import annotations
 
+import json
 import os
 import platform
 import time
@@ -46,6 +54,41 @@ REF_REQ_PER_S = {
     "batch32/MASA/8x8": 320_000.0,
     "multicore2/MASA/FRFCFS/8x8": 37_000.0,
 }
+
+
+def _backends() -> tuple[str, ...]:
+    """Benchmarkable backends on this host: the packed scan and the Pallas
+    interpret leg always; the compiled kernel only where a TPU is attached
+    (Mosaic refuses to lower for CPU)."""
+    out = ["scan", "pallas-interpret"]
+    if any(d.platform == "tpu" for d in jax.devices()):
+        out.insert(1, "pallas")
+    return tuple(out)
+
+
+def _prior_trajectory() -> list[dict]:
+    """The committed predecessor's trajectory + its own summary point.
+
+    Reading the file this run will overwrite chains the points: every
+    committed artifact carries every earlier committed point, so the full
+    req/s trail survives regeneration without any external index."""
+    try:
+        with open(OUT_PATH) as f:
+            prev = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return []
+    perf = (prev.get("results") or {}).get("perf") or {}
+    by_name = {c.get("name"): c.get("req_per_s")
+               for c in perf.get("cells", ())}
+    point = {
+        "git_sha": prev.get("git_sha"),
+        "created_unix": prev.get("created_unix"),
+        "default_req_per_s": perf.get("default_req_per_s"),
+        "batch32_req_per_s": by_name.get("batch32/MASA/8x8"),
+        "multicore2_req_per_s": by_name.get("multicore2/MASA/FRFCFS/8x8"),
+        "host": perf.get("host"),
+    }
+    return list(prev.get("trajectory") or []) + [point]
 
 
 def _warm_best(fn) -> float:
@@ -114,6 +157,54 @@ def run() -> dict:
         "batch32/MASA/8x8", N_PERF * len(batch),
         lambda: simulate_batch(batch, Policy.MASA).total_cycles))
 
+    # ---- backend axis: packed scan vs the fused Pallas kernels ------------
+    # The scan rows reuse the cells above (same process, same trace); each
+    # non-scan backend gets interleaved single + batch32 cells so the
+    # kernel-vs-scan ratios come from one host state, not two runs.
+    backends = {"scan": {
+        "single_req_per_s": next(c["req_per_s"] for c in cells
+                                 if c["name"] == "single/MASA/8x8"),
+        "batch32_req_per_s": next(c["req_per_s"] for c in cells
+                                  if c["name"] == "batch32/MASA/8x8"),
+    }}
+    tr = trace_for(workload("lbm"), N_PERF, cfg, SEED)
+    for backend in _backends():
+        if backend == "scan":
+            continue
+        bcfg = SimConfig(backend=backend)
+        c_single = _cell(
+            f"single/MASA/8x8/{backend}", N_PERF,
+            lambda tr=tr, bcfg=bcfg:
+                simulate(tr, Policy.MASA, bcfg).total_cycles)
+        c_batch = _cell(
+            f"batch32/MASA/8x8/{backend}", N_PERF * len(batch),
+            lambda bcfg=bcfg:
+                simulate_batch(batch, Policy.MASA, bcfg).total_cycles)
+        cells.extend([c_single, c_batch])
+        backends[backend] = {
+            "single_req_per_s": c_single["req_per_s"],
+            "batch32_req_per_s": c_batch["req_per_s"],
+        }
+
+    # ---- per-step microbenchmark: ns/step per backend x trace length ------
+    # Fixed dispatch/launch overhead amortizes with N, so the two lengths
+    # separate per-step cost from per-call cost — the number block-size /
+    # unroll tuning actually needs.
+    per_step = {}
+    for backend in _backends():
+        bcfg = SimConfig(backend=backend)
+        row = {}
+        for n in (500, N_PERF):
+            trn = trace_for(workload("lbm"), n, cfg, SEED)
+            fn = (lambda trn=trn, bcfg=bcfg:
+                  simulate(trn, Policy.MASA, bcfg).total_cycles)
+            jax.clear_caches()
+            jax.block_until_ready(fn())
+            row[f"n{n}"] = round(_warm_best(fn) / n * 1e9, 1)
+        per_step[backend] = row
+        emit(f"perf.step_ns.{backend}", 0.0,
+             ";".join(f"{k}={v}ns" for k, v in row.items()))
+
     # ---- multicore: core-count scaling under FR-FCFS ----------------------
     for names in (("mcf", "lbm"), ("mcf", "lbm", "milc", "libquantum")):
         mix = [trace_for(workload(m), N_PERF, cfg, SEED,
@@ -144,9 +235,27 @@ def run() -> dict:
         unroll_cells.append(c)
     cells.extend(unroll_cells)
 
+    # ---- lanes unroll sweep (batch32, dynamic mlp) ------------------------
+    # The lane-batched scan has its OWN tuned unroll (_LANES_UNROLL): the
+    # lane step carries O(B) vector work per sequential dependency, so a
+    # small unroll pays where the 1-lane step's does not.
+    from repro.core.dram.trace import stack_traces
+    st = stack_traces(batch)
+    eff, _, nb, ns = dram_engine._controller_args(Policy.MASA, cfg)
+    lanes_args = tuple(jnp.asarray(st[k]) for k in
+                       ("bank", "subarray", "row", "is_write", "gap", "dep"))
+    mlp_lanes = jnp.asarray(st["mlp_window"], jnp.int32)
+    for u in (1, 2, 4):
+        cells.append(_cell(
+            f"lanes_unroll{u}/MASA/8x8", N_PERF * len(batch),
+            lambda u=u: controller._simulate_stacked_lanes(
+                eff, nb, ns, cfg.timing, *lanes_args, mlp_lanes,
+                mlp_static=None, unroll=u).total_cycles))
+
     host = {"platform": platform.system().lower() + "-" + platform.machine(),
             "cpu_count": os.cpu_count()}
     default_cell = next(c for c in cells if c["name"] == "single/MASA/8x8")
+    kernel_backend = "pallas" if "pallas" in backends else "pallas-interpret"
     summary = {
         "default_req_per_s": default_cell["req_per_s"],
         "default_speedup_vs_ref": default_cell["speedup_vs_ref"],
@@ -156,13 +265,39 @@ def run() -> dict:
         # speedup_vs_ref divides by constants measured on ref_host; on any
         # other host class compare same-host artifact pairs instead.
         "ref_comparable": host == REF_HOST,
+        "backends": backends,
+        "per_step_ns": per_step,
+        # same-process kernel-vs-scan ratios (validate.py --perf-guard
+        # reads these; on CPU hosts the kernel leg is the interpret
+        # emulation — a parity path, expected <= 1)
+        "kernel_vs_scan": {
+            "kernel_backend": kernel_backend,
+            "single": round(backends[kernel_backend]["single_req_per_s"]
+                            / backends["scan"]["single_req_per_s"], 3),
+            "batch32": round(backends[kernel_backend]["batch32_req_per_s"]
+                             / backends["scan"]["batch32_req_per_s"], 3),
+        },
         "n_cells": len(cells),
         "cells": cells,
     }
 
+    trajectory = _prior_trajectory()
     doc = bench_artifact(results={"perf": summary}, sweeps=[],
                          argv=["perf_bench"], seed=SEED)
+    doc["trajectory"] = trajectory
     path = write_artifact(OUT_PATH, doc)
+    if trajectory:
+        last = trajectory[-1]
+        for key in ("default_req_per_s", "batch32_req_per_s",
+                    "multicore2_req_per_s"):
+            cell_name = {"default_req_per_s": "single/MASA/8x8",
+                         "batch32_req_per_s": "batch32/MASA/8x8",
+                         "multicore2_req_per_s": "multicore2/MASA/FRFCFS/8x8"}[key]
+            now = next((c["req_per_s"] for c in cells
+                        if c["name"] == cell_name), None)
+            if now and last.get(key):
+                emit(f"perf.trajectory.{key}", 0.0,
+                     f"{now / last[key]:.2f}x_vs_{str(last.get('git_sha'))[:8]}")
     emit("perf.artifact", 0.0, path)
     return summary
 

@@ -54,8 +54,9 @@ REGISTRY: tuple[Bench, ...] = (
           "Frontend: address-mapping x policy sensitivity (dense footprint)"),
     Bench("perf", "benchmarks.perf_bench", ("perf",),
           "Simulator throughput trajectory (writes BENCH_perf.json)"),
-    Bench("kernels", "benchmarks.kernel_bench", ("accel",),
-          "Layer B: Pallas kernel residency"),
+    Bench("kernels", "benchmarks.kernel_bench", ("accel", "kernel"),
+          "Layer B: revived Pallas kernel residency + oracle agreement "
+          "(validated artifact, like smoke/mapping/perf/refresh)"),
     Bench("serving", "benchmarks.serving_bench", ("accel",),
           "Layer C: SALP-aware scheduler"),
     Bench("smoke", "benchmarks.smoke", ("smoke",),

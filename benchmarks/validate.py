@@ -12,8 +12,9 @@ Usage::
     python -m benchmarks.validate artifacts/BENCH_perf.json --suite perf \
         --perf-guard
 
-Suites: ``smoke`` / ``mapping`` / ``perf`` / ``refresh`` (auto-detected from
-the artifact's ``results`` keys when ``--suite`` is omitted). Exit code 0 =
+Suites: ``smoke`` / ``mapping`` / ``perf`` / ``refresh`` / ``kernels``
+(auto-detected from the artifact's ``results`` keys when ``--suite`` is
+omitted). Exit code 0 =
 valid, 1 = validation failed, 2 = bad invocation.
 
 ``--check-commands PATH`` re-parses a command-trace dump the bench left next
@@ -112,30 +113,92 @@ def validate_perf(doc: dict, guard: bool = False) -> str:
         _check(set(cell) >= {"name", "n_requests", "cold_s", "warm_s",
                              "compile_s", "req_per_s"},
                f"cell fields: {sorted(cell)}")
+    backends = perf.get("backends")
+    if backends is not None:  # older artifacts predate the backend axis
+        _check("scan" in backends, f"backends missing scan: {backends}")
+        for b, row in backends.items():
+            _check(row.get("single_req_per_s", 0) > 0
+                   and row.get("batch32_req_per_s", 0) > 0,
+                   f"backend {b}: {row}")
+        kvs = perf.get("kernel_vs_scan") or {}
+        _check(kvs.get("kernel_backend") in backends,
+               f"kernel_vs_scan backend: {kvs}")
     msg = (f"perf ok: {doc['git_sha']} "
            f"{perf['default_req_per_s'] / 1e3:.1f}k req/s")
     if guard:
-        msg += "; " + perf_guard(perf)
+        msg += "; " + perf_guard(perf, doc.get("trajectory"))
     return msg
 
 
-def perf_guard(perf: dict) -> str:
-    """Warn-only trajectory guard against the committed seeded reference.
+def perf_guard(perf: dict, trajectory: list | None = None) -> str:
+    """Warn-only trajectory guard: committed reference, kernel-vs-scan,
+    and previous-artifact comparison.
 
-    Reads the pinned ``REF_REQ_PER_S`` origin point; a drop below
-    ``PERF_GUARD_RATIO`` of it emits a GitHub warning annotation on stdout
-    (picked up by the Actions runner) but never fails validation.
+    Reads the pinned ``REF_REQ_PER_S`` origin point plus (when the
+    artifact carries them) the same-process ``kernel_vs_scan`` ratios and
+    the last committed ``trajectory`` point; a throughput drop below
+    ``PERF_GUARD_RATIO`` of either reference emits a GitHub ``::warning``
+    annotation on stdout (picked up by the Actions runner) but never fails
+    validation — CI hosts are too noisy to gate on speed.
     """
     from benchmarks.perf_bench import REF_REQ_PER_S
     ref = REF_REQ_PER_S["single/MASA/8x8"]
     got = perf["default_req_per_s"]
+    parts = []
     if got < PERF_GUARD_RATIO * ref:
         print(f"::warning title=Perf trajectory::default_req_per_s "
               f"{got:.0f} fell below {PERF_GUARD_RATIO:.0%} of the committed "
               f"reference {ref:.0f} (ratio {got / ref:.2f}). CI hosts are "
               f"noisy — investigate only if this persists across runs.")
-        return f"guard: BELOW reference ({got / ref:.2f}x, warned)"
-    return f"guard: {got / ref:.2f}x of committed reference"
+        parts.append(f"guard: BELOW reference ({got / ref:.2f}x, warned)")
+    else:
+        parts.append(f"guard: {got / ref:.2f}x of committed reference")
+
+    kvs = perf.get("kernel_vs_scan")
+    if kvs:
+        kb = kvs.get("kernel_backend")
+        parts.append(f"{kb} vs scan: single {kvs.get('single')}x, "
+                     f"batch32 {kvs.get('batch32')}x")
+        # the interpret leg is an emulation (parity path, expected < 1);
+        # only a COMPILED kernel slower than the scan is a perf signal
+        if kb == "pallas" and (kvs.get("batch32") or 1) < 1.0:
+            print(f"::warning title=Kernel vs scan::compiled pallas batch32 "
+                  f"throughput is {kvs['batch32']}x the packed scan — the "
+                  f"fused kernel should not lose to its reference.")
+
+    last = (trajectory or [{}])[-1]
+    prev = last.get("batch32_req_per_s")
+    now = next((c["req_per_s"] for c in perf.get("cells", ())
+                if c["name"] == "batch32/MASA/8x8"), None)
+    if prev and now:
+        parts.append(f"batch32 {now / prev:.2f}x vs previous artifact "
+                     f"({str(last.get('git_sha'))[:8]})")
+        if now < PERF_GUARD_RATIO * prev:
+            print(f"::warning title=Perf trajectory::batch32 req/s "
+                  f"{now:.0f} fell below {PERF_GUARD_RATIO:.0%} of the "
+                  f"previous committed artifact's {prev:.0f}.")
+    return "; ".join(parts)
+
+
+def validate_kernels(doc: dict) -> str:
+    """The revived-seed-kernel suite: every kernel must agree with its
+    jnp oracle (interpret mode) and the analytic SALP ladder must order."""
+    validate_common(doc)
+    k = doc["results"].get("kernels") or {}
+    _check(k.get("kernels_ok") is True, f"kernels_ok: {k.get('kernels_ok')}")
+    errs = k.get("errs") or {}
+    want = {"moe_gemm", "masa_gemm", "ssd_scan", "flash_attention",
+            "paged_attention/shared_prefix", "paged_attention/private"}
+    _check(set(errs) >= want, f"kernels covered: {sorted(errs)}")
+    from benchmarks.kernel_bench import ERR_TOL
+    for name, err in errs.items():
+        _check(0 <= err < ERR_TOL, f"{name} err {err} >= {ERR_TOL}")
+    ladder = k.get("ladder") or {}
+    _check(ladder.get("baseline") == 1.0
+           and ladder.get("masa", 0) >= ladder.get("salp1", 0) > 1.0,
+           f"salp ladder: {ladder}")
+    worst = max(errs, key=errs.get)
+    return f"kernels ok: {len(errs)} oracles, worst {worst}={errs[worst]:.1e}"
 
 
 def validate_refresh(doc: dict) -> str:
@@ -200,6 +263,7 @@ SUITES: dict[str, Callable[[dict], str]] = {
     "mapping": validate_mapping,
     "perf": validate_perf,
     "refresh": validate_refresh,
+    "kernels": validate_kernels,
 }
 
 

@@ -1,0 +1,78 @@
+"""Installed-JAX API compatibility shims (seed-kernel toolchain revival).
+
+The seed Pallas kernels and the distributed stack were written against a
+newer JAX API surface than the container ships. Rather than forking every
+call site per version, the drift is absorbed here:
+
+* ``pltpu.CompilerParams``       <-> ``pltpu.TPUCompilerParams`` (rename),
+* ``jax.shard_map(check_vma=)``  <-> ``jax.experimental.shard_map.shard_map
+  (check_rep=)`` (promotion out of experimental renamed the replication-
+  check flag),
+* ``jax.make_mesh(axis_types=)`` <-> ``jax.make_mesh`` without the argument
+  (older APIs have no explicit/auto axis-type distinction; everything is
+  Auto, which is exactly what the call sites request).
+
+Every shim resolves feature-by-feature (``hasattr``/signature probes, never
+version compares), so the same call sites keep working when the toolchain
+moves forward again.
+"""
+from __future__ import annotations
+
+import inspect
+
+import jax
+from jax.experimental.pallas import tpu as pltpu
+
+#: Mosaic compiler-params class under whichever name the installed JAX uses.
+TPUCompilerParams = (getattr(pltpu, "TPUCompilerParams", None)
+                     or getattr(pltpu, "CompilerParams"))
+
+
+def tpu_compiler_params(**kwargs) -> object:
+    """``pltpu.{TPU,}CompilerParams(**kwargs)`` under either name."""
+    return TPUCompilerParams(**kwargs)
+
+
+_MAKE_MESH_AXIS_TYPES = ("axis_types"
+                         in inspect.signature(jax.make_mesh).parameters)
+_AXIS_TYPE_AUTO = getattr(getattr(jax.sharding, "AxisType", None),
+                          "Auto", None)
+
+
+def make_mesh(axis_shapes, axis_names, **kwargs) -> jax.sharding.Mesh:
+    """``jax.make_mesh`` with every axis Auto, on any JAX.
+
+    Newer APIs default new axes to Explicit unless told otherwise, so when
+    ``axis_types`` exists it is pinned to Auto; older APIs have no such
+    argument and Auto semantics already.
+    """
+    if _MAKE_MESH_AXIS_TYPES and _AXIS_TYPE_AUTO is not None:
+        kwargs.setdefault("axis_types",
+                          (_AXIS_TYPE_AUTO,) * len(axis_names))
+    return jax.make_mesh(axis_shapes, axis_names, **kwargs)
+
+
+def axis_size(axis_name: str) -> int:
+    """``jax.lax.axis_size`` on any JAX.
+
+    Older APIs lack it; ``psum`` of a concrete 1 constant-folds to the
+    (static) mesh-axis size, so the fallback still returns a python int.
+    """
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+if hasattr(jax, "shard_map"):
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+        """``jax.shard_map`` (top-level API)."""
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+else:
+    from jax.experimental import shard_map as _shard_map_mod
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+        """``jax.experimental.shard_map`` (``check_vma`` was ``check_rep``)."""
+        return _shard_map_mod.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                        out_specs=out_specs,
+                                        check_rep=check_vma)

@@ -259,9 +259,11 @@ def simulate_commands(trace: Trace, policy: Policy,
     (the emission branch adds outputs, never ops, to the timing math).
     """
     from repro.core.dram import controller
+    from repro.core.dram import pallas_step
 
     controller.validate_mlp_window(trace.mlp_window)
     cfg = dataclasses.replace(config, emit_commands=True)
+    pallas_step.check_no_emit(cfg)
     eff, sched, nb, ns = _controller_args(policy, cfg)
     tr = (to_ideal(trace, cfg.n_banks, cfg.n_subarrays)
           if policy == Policy.IDEAL else trace)
@@ -285,10 +287,12 @@ def simulate_mix_commands(traces: list[Trace], policy: Policy,
     can be sliced back out.
     """
     from repro.core.dram import controller
+    from repro.core.dram import pallas_step
     from repro.core.dram.multicore import (MulticoreResult, _prep_mix,
                                            alone_baseline_cycles)
 
     cfg = dataclasses.replace(config, emit_commands=True)
+    pallas_step.check_no_emit(cfg)
     eff, sched, nb, ns = _controller_args(policy, cfg)
     st, rank = _prep_mix(traces, policy, cfg)
     controller.validate_mlp_window(st["mlp_window"])

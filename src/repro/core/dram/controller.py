@@ -62,6 +62,15 @@ _NEG = _engine._NEG
 #: took minutes to compile (see docs/performance.md for the numbers).
 _SCAN_UNROLL = 1
 
+#: Partial-unroll factor for the LANE-BATCHED scan
+#: (:func:`_simulate_stacked_lanes`), swept separately in
+#: ``benchmarks/perf_bench.py`` (``lanes_unroll*`` cells; bit-identical for
+#: any value). Unlike the 1-lane step, the lane step carries O(B) vector
+#: work per sequential dependency, so a 2-way unroll overlaps one step's
+#: scatter with the next step's gather math without blowing up code size —
+#: ~1.1-1.2x on batch32; unroll=4 regresses (see docs/performance.md).
+_LANES_UNROLL = 2
+
 
 def validate_mlp_window(mlp_window) -> None:
     """Enforce the completion-ring invariant ``mlp_window < _RING``.
@@ -86,47 +95,36 @@ def _refresh_due0(nb: int, t_refi: int) -> jax.Array:
             + t_refi)
 
 
-@functools.partial(jax.jit, static_argnames=("policy", "scheduler", "n_banks",
-                                             "n_subarrays", "timing",
-                                             "refresh_mode", "closed_row",
-                                             "emit_commands", "unroll"))
-def _simulate_controller(policy: int, scheduler: int, n_banks: int,
-                         n_subarrays: int, timing: DramTiming,
-                         refresh_mode: int,
-                         bank, subarray, row, is_write, gap, dep,  # [C, N]
-                         mlp_window, rank,                         # [C]
-                         closed_row: bool = False,
-                         emit_commands: bool = False,
-                         unroll: int = _SCAN_UNROLL):
-    """Scan C*N controller steps; returns (SimResult, per-core max completion).
+def _refresh_table0(n_banks: int, t: DramTiming, refresh_mode: int):
+    """Initial per-bank refresh table [nb, REF_F] (None when refresh is off).
 
-    With the static ``emit_commands`` flag a third element is returned: the
-    scan's stacked per-step command log — ``dict(cmds=[steps, slots, CMD_F],
-    comp=[steps], core=[steps], req=[steps])`` — which
-    :mod:`repro.core.dram.commands` decodes into a :class:`CommandTrace`.
-    The engine's slots are extended with the refresh commands this layer
-    issues (``OP_REF``; DARP emits its idle-drain / forced / write-shadow
-    burst chains as separate slots, chain length in the aux lane). The flag
-    off is the exact historical trace — emission is pure Python branching.
+    The staggered tREFI deadline plus the in-flight refresh burst (end
+    cycle, refreshed subarray). Once a served request triggers a refresh and
+    the deadline advances, later heads to that bank must still see the burst
+    until it ends — other cores' heads (C > 1), and, under DSARP+MASA, even
+    the same core's: a non-target-subarray request is not blocked, so
+    vis_prev does not advance past ref_end and a later target-subarray
+    request would otherwise read the subarray mid-burst. Under blocking
+    refresh (mode 1) the single-core vis_prev chain does carry every later
+    request past ref_end, so there this state never binds.
     """
-    t = timing
-    C, N = bank.shape
+    if not refresh_mode:
+        return None
+    return (jnp.zeros((n_banks, L.REF_F), jnp.int32)
+            .at[:, L.REF_NEXT_DUE].set(_refresh_due0(n_banks, t.t_refi)))
+
+
+def _refresh_fns(policy: int, t: DramTiming, n_subarrays: int,
+                 refresh_mode: int, emit_commands: bool):
+    """Build the three refresh closures shared by every executor.
+
+    Returned as ``(head_visibility, update_ref, ref_cmds)``; the scan paths
+    in :func:`_simulate_controller` and the Pallas kernel bodies
+    (:mod:`repro.core.dram.pallas_step`) call the SAME functions, so the
+    refresh semantics cannot diverge between backends.
+    """
     is_masa = policy == Policy.MASA
     zero = jnp.int32(0)
-    bank_state0 = _engine._bank_state0(n_banks, n_subarrays)
-    # Per-bank refresh table [nb, REF_F]: the staggered tREFI deadline
-    # plus the in-flight refresh burst (end cycle, refreshed subarray).
-    # Once a served request triggers a refresh and the deadline advances,
-    # later heads to that bank must still see the burst until it ends —
-    # other cores' heads (C > 1), and, under DSARP+MASA, even the same
-    # core's: a non-target-subarray request is not blocked, so vis_prev
-    # does not advance past ref_end and a later target-subarray request
-    # would otherwise read the subarray mid-burst. Under blocking refresh
-    # (mode 1) the single-core vis_prev chain does carry every later
-    # request past ref_end, so there this state never binds.
-    ref0 = (jnp.zeros((n_banks, L.REF_F), jnp.int32)
-            .at[:, L.REF_NEXT_DUE].set(_refresh_due0(n_banks, t.t_refi))
-            if refresh_mode else None)
 
     def head_visibility(ref, vis, hb, hs, hwr):
         """Refresh gating of one step's head visibility (shared C=1 / C>1).
@@ -299,21 +297,40 @@ def _simulate_controller(policy: int, scheduler: int, n_banks: int,
             rec(directive["shadow"], comp, _NEG, jnp.int32(1)),
         ])
 
-    if C == 1:
-        # ---- single-core fast path --------------------------------------
-        # With one core there is exactly one head request per step, so the
-        # serve order is statically program order: the request fields ride
-        # in as scan `xs` (zero gathers), the scheduler/argmin disappears
-        # (argmin over one element is 0), and the per-core vectors collapse
-        # to scalars. Bit-identical to the general path by construction —
-        # tests/test_controller.py pins 1-core mixes against `simulate`.
-        mlp0 = mlp_window[0]
-        state0 = dict(bank=bank_state0, ring=jnp.zeros((_RING,), jnp.int32),
-                      vis_prev=zero, max_comp=zero)
-        if refresh_mode:
-            state0["ref"] = ref0
+    return head_visibility, update_ref, ref_cmds
 
-        def step1(state, x):
+
+def _state1_init(n_banks: int, n_subarrays: int, t: DramTiming,
+                 refresh_mode: int) -> dict:
+    """Initial carry of the single-core (C == 1) fast-path step."""
+    zero = jnp.int32(0)
+    state0 = dict(bank=_engine._bank_state0(n_banks, n_subarrays),
+                  ring=jnp.zeros((_RING,), jnp.int32),
+                  vis_prev=zero, max_comp=zero)
+    if refresh_mode:
+        state0["ref"] = _refresh_table0(n_banks, t, refresh_mode)
+    return state0
+
+
+def _build_step1(policy: int, t: DramTiming, refresh_mode: int,
+                 closed_row: bool, emit_commands: bool, mlp0, refresh_fns):
+    """Build the single-core fast-path step function (carry, [XS_F] x row).
+
+    With one core there is exactly one head request per step, so the
+    serve order is statically program order: the request fields ride
+    in as `xs` rows (zero gathers), the scheduler/argmin disappears
+    (argmin over one element is 0), and the per-core vectors collapse
+    to scalars. Bit-identical to the general path by construction —
+    tests/test_controller.py pins 1-core mixes against `simulate`.
+
+    Shared by the `lax.scan` in :func:`_simulate_controller` and the
+    Pallas lane kernel's `fori_loop` (:mod:`repro.core.dram.pallas_step`)
+    — ONE source of controller-step truth for both backends.
+    """
+    head_visibility, update_ref, ref_cmds = refresh_fns
+    zero = jnp.int32(0)
+
+    def step1(state, x):
             # x is one [XS_F] row of the packed request tensor: unpacking is
             # static indexing, fused into the step's arithmetic for free.
             i, hb, hs, hw = x[L.XS_IDX], x[L.XS_BANK], x[L.XS_SA], x[L.XS_ROW]
@@ -351,30 +368,36 @@ def _simulate_controller(policy: int, scheduler: int, n_banks: int,
                 cmds = jnp.concatenate([cmds, ref_cmds(directive, hb, comp)])
             return new, dict(cmds=cmds, comp=comp, core=zero, req=i)
 
-        xs = jnp.stack([jnp.arange(N, dtype=jnp.int32), bank[0], subarray[0],
-                        row[0], is_write[0].astype(jnp.int32), gap[0],
-                        dep[0].astype(jnp.int32)], axis=1)   # [N, XS_F]
-        final, ys = jax.lax.scan(step1, state0, xs, unroll=unroll)
-        res = _engine.result_from_state(N, final["bank"]["scalars"],
-                                        final["vis_prev"])
-        if emit_commands:
-            return res, final["max_comp"][None], ys
-        return res, final["max_comp"][None]
+    return step1
 
-    # ---- general C-core path --------------------------------------------
-    # One packed [C, N, RQ_F] request tensor: each step gathers every head
-    # field with ONE advanced-indexing gather instead of seven.
-    reqs = jnp.stack([bank, subarray, row, is_write.astype(jnp.int32),
-                      gap, dep.astype(jnp.int32)], axis=-1)
-    cores = jnp.arange(C, dtype=jnp.int32)
 
+def _stateC_init(n_banks: int, n_subarrays: int, t: DramTiming,
+                 refresh_mode: int, C: int) -> dict:
+    """Initial carry of the general C-core step."""
     state0 = dict(
-        bank=bank_state0,
+        bank=_engine._bank_state0(n_banks, n_subarrays),
         core=jnp.zeros((C, L.CORE_F), jnp.int32),
         comp_ring=jnp.zeros((C, _RING), jnp.int32),
     )
     if refresh_mode:
-        state0["ref"] = ref0
+        state0["ref"] = _refresh_table0(n_banks, t, refresh_mode)
+    return state0
+
+
+def _build_stepC(policy: int, scheduler: int, t: DramTiming,
+                 refresh_mode: int, closed_row: bool, emit_commands: bool,
+                 reqs, mlp_window, rank, refresh_fns):
+    """Build the general C-core step (carry, None) over the packed ``reqs``.
+
+    ``reqs`` is the ONE packed [C, N, RQ_F] request tensor: each step
+    gathers every head field with a single advanced-indexing gather
+    instead of seven. Shared by the scan and the Pallas mix kernel,
+    exactly like :func:`_build_step1`.
+    """
+    head_visibility, update_ref, ref_cmds = refresh_fns
+    C, N = reqs.shape[0], reqs.shape[1]
+    cores = jnp.arange(C, dtype=jnp.int32)
+    zero = jnp.int32(0)
 
     def step(state, _):
         bank_st = state["bank"]
@@ -463,9 +486,248 @@ def _simulate_controller(policy: int, scheduler: int, n_banks: int,
                 [cmds, ref_cmds(directive_c, hc[L.RQ_BANK], comp)])
         return new, dict(cmds=cmds, comp=comp, core=c, req=pc)
 
+    return step
+
+
+def _pack_reqs(bank, subarray, row, is_write, gap, dep):
+    """Stack the six [..., N] request fields into one [..., N, RQ_F] tensor."""
+    return jnp.stack([bank, subarray, row, is_write.astype(jnp.int32),
+                      gap, dep.astype(jnp.int32)], axis=-1)
+
+
+def _pack_xs(bank, subarray, row, is_write, gap, dep):
+    """[N] request fields -> the C == 1 fast path's [N, XS_F] step rows."""
+    return jnp.stack([jnp.arange(bank.shape[0], dtype=jnp.int32), bank,
+                      subarray, row, is_write.astype(jnp.int32), gap,
+                      dep.astype(jnp.int32)], axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("policy", "scheduler", "n_banks",
+                                             "n_subarrays", "timing",
+                                             "refresh_mode", "closed_row",
+                                             "emit_commands", "unroll"))
+def _simulate_controller(policy: int, scheduler: int, n_banks: int,
+                         n_subarrays: int, timing: DramTiming,
+                         refresh_mode: int,
+                         bank, subarray, row, is_write, gap, dep,  # [C, N]
+                         mlp_window, rank,                         # [C]
+                         closed_row: bool = False,
+                         emit_commands: bool = False,
+                         unroll: int = _SCAN_UNROLL):
+    """Scan C*N controller steps; returns (SimResult, per-core max completion).
+
+    With the static ``emit_commands`` flag a third element is returned: the
+    scan's stacked per-step command log — ``dict(cmds=[steps, slots, CMD_F],
+    comp=[steps], core=[steps], req=[steps])`` — which
+    :mod:`repro.core.dram.commands` decodes into a :class:`CommandTrace`.
+    The engine's slots are extended with the refresh commands this layer
+    issues (``OP_REF``; DARP emits its idle-drain / forced / write-shadow
+    burst chains as separate slots, chain length in the aux lane). The flag
+    off is the exact historical trace — emission is pure Python branching.
+
+    The step bodies and refresh closures live in the module-level builders
+    (:func:`_build_step1` / :func:`_build_stepC` / :func:`_refresh_fns`):
+    this function is the `lax.scan` instantiation, and the Pallas kernels
+    (:mod:`repro.core.dram.pallas_step`) are `fori_loop` instantiations of
+    the SAME builders — backend parity by construction.
+    """
+    t = timing
+    C, N = bank.shape
+    fns = _refresh_fns(policy, t, n_subarrays, refresh_mode, emit_commands)
+
+    if C == 1:
+        step1 = _build_step1(policy, t, refresh_mode, closed_row,
+                             emit_commands, mlp_window[0], fns)
+        state0 = _state1_init(n_banks, n_subarrays, t, refresh_mode)
+        xs = _pack_xs(bank[0], subarray[0], row[0], is_write[0], gap[0],
+                      dep[0])                                # [N, XS_F]
+        final, ys = jax.lax.scan(step1, state0, xs, unroll=unroll)
+        res = _engine.result_from_state(N, final["bank"]["scalars"],
+                                        final["vis_prev"])
+        if emit_commands:
+            return res, final["max_comp"][None], ys
+        return res, final["max_comp"][None]
+
+    reqs = _pack_reqs(bank, subarray, row, is_write, gap, dep)
+    step = _build_stepC(policy, scheduler, t, refresh_mode, closed_row,
+                        emit_commands, reqs, mlp_window, rank, fns)
+    state0 = _stateC_init(n_banks, n_subarrays, t, refresh_mode, C)
     final, ys = jax.lax.scan(step, state0, None, length=C * N, unroll=unroll)
     res = _engine.result_from_state(
         C * N, final["bank"]["scalars"], final["core"][:, L.CORE_VIS_PREV])
     if emit_commands:
         return res, final["core"][:, L.CORE_MAX_COMP], ys
     return res, final["core"][:, L.CORE_MAX_COMP]
+
+
+@functools.partial(jax.jit, static_argnames=("policy", "n_banks",
+                                             "n_subarrays", "timing",
+                                             "mlp_static", "unroll"))
+def _simulate_stacked_lanes(policy: int, n_banks: int, n_subarrays: int,
+                            timing: DramTiming,
+                            bank, subarray, row, is_write, gap, dep,  # [B, N]
+                            mlp_window,                               # [B]
+                            mlp_static: int | None = None,
+                            unroll: int = _LANES_UNROLL):
+    """Lane-vectorized batched single-core controller (ONE scan, B lanes).
+
+    The historical batched path is ``vmap`` over the C == 1 fast path —
+    correct, but it turns every step into B-way batched versions of the
+    *per-trace* ops: the ``[ns + 1, SA_F]`` block gather/scatter becomes a
+    ``[B, ns + 1, SA_F]`` gather/scatter and the full-block rebuild costs
+    O(B * ns) per step. This path restructures instead of batching: one
+    scan whose carry holds all B lanes' state side by side, with the
+    row-wise step math (:func:`engine._step_math_lanes`) touching only the
+    three ``[B, SA_F]`` rows a step can change. The scan step is trimmed to
+    the sequentially-dependent minimum three ways:
+
+    * **one scatter** — the three changed rows go back as a single
+      scatter-ADD of deltas (``new - old``) at indices ``[so, s, ns]``: add
+      is well-defined under the duplicate index ``so == s`` that arises
+      when the other-row gate is off (its delta is exactly zero then),
+      which a 3-deep ``.set`` sequence had to order around;
+    * **counters out of the loop** — SimResult's ten counters are pure
+      functions of the per-step flags, so the scan just stacks the raw
+      flags (``ys``) and the counters are reconstructed afterwards in one
+      vectorized O(N·B) pass (sums / running extrema are order-insensitive
+      mod-2^32, so bit-parity holds);
+    * **ring as slices** — the completion ring is carried ``[_RING, B]``
+      (lane-minor) so the per-step write is always a contiguous row
+      ``dynamic_update_slice``. When every lane shares one ``mlp_window``
+      (the overwhelmingly common stacked case, checked host-side by the
+      caller and passed as static ``mlp_static``) the ROB read is a
+      contiguous row ``dynamic_slice`` too; per-lane windows fall back to
+      a cross-lane gather on the read only. The ``i - 1`` ring read of the
+      reference is carried directly as ``comp_last`` either way.
+
+    Eligibility is the fast-path configuration set (refresh off, open-row
+    policy, no command emission); ``engine.simulate_stacked`` dispatches
+    here and falls back to the vmapped general path otherwise. The C == 1
+    scheduler degeneration applies per lane (program order), so no
+    scheduler argument. Bit-identical to the vmapped path — the stacked
+    parity suites pin it against per-trace ``simulate`` on every combo.
+    """
+    t = timing
+    B, N = bank.shape
+    ns = n_subarrays
+    is_masa = policy == Policy.MASA
+    lanes = jnp.arange(B, dtype=jnp.int32)
+    zero = jnp.int32(0)
+    base = _engine._bank_state0(n_banks, ns)
+    uniform = mlp_static is not None
+    state0 = dict(
+        sa=jnp.broadcast_to(base["sa"], (B, n_banks, ns + 1, L.SA_F)),
+        act_hist=jnp.zeros((B, 4), jnp.int32),
+        col=dict(col_last=jnp.full((B,), -(10 ** 6), jnp.int32),
+                 col_last_wr=jnp.zeros((B,), bool),
+                 wr_data_end=jnp.zeros((B,), jnp.int32),
+                 bus_free=jnp.zeros((B,), jnp.int32)),
+        ring=jnp.zeros((_RING, B), jnp.int32),
+        comp_last=jnp.zeros((B,), jnp.int32),
+        vis_prev=jnp.zeros((B,), jnp.int32),
+    )
+    mlp = jnp.asarray(mlp_window, jnp.int32)
+    i32 = lambda x: jnp.asarray(x, jnp.int32)  # noqa: E731
+    # ONE packed [N, B, XS_F - 1] request tensor (XS_BANK..XS_DEP order,
+    # one lane left of the fast path's xs): the scan reads one buffer per
+    # step and the per-field unpack slices fuse into the step's arithmetic,
+    # instead of seven per-leaf dynamic-slice reads.
+    xr = jnp.stack([bank.T, subarray.T, row.T, i32(is_write.T), gap.T,
+                    i32(dep.T)], axis=-1)
+    xs = (jnp.arange(N, dtype=jnp.int32), xr)
+    # per-step facts for the post-scan counter pass, packed the same way
+    # (one [B, YS_F] stack per step -> one buffer write instead of six)
+    Y_TCOL, Y_COMP, Y_VIS, Y_HIT, Y_PREOWN, Y_EXTRA, YS_F = range(7)
+
+    def step(state, x):
+        i, xrow = x
+        hb, hs, hw = xrow[:, 0], xrow[:, 1], xrow[:, 2]
+        hwr, hgap, hdep = xrow[:, 3] != 0, xrow[:, 4], xrow[:, 5]
+        ring = state["ring"]
+        if uniform:
+            rob_raw = jax.lax.dynamic_slice(
+                ring, ((i - mlp_static) % _RING, zero), (1, B))[0]
+            rob_lim = jnp.where(i >= mlp_static, rob_raw, 0)
+        else:
+            rob_raw = ring[(i - mlp) % _RING, lanes]
+            rob_lim = jnp.where(i >= mlp, rob_raw, 0)
+        vis = jnp.maximum(state["vis_prev"] + hgap,
+                          jnp.maximum(jnp.where(hdep != 0,
+                                                state["comp_last"], 0),
+                                      rob_lim))
+        sa = state["sa"]
+        if is_masa:
+            # no cross-subarray PRE under MASA: the two touched rows (own
+            # subarray + bank-vector) are known up front -> ONE gather, and
+            # the same index matrix drives the scatter back
+            rows = jnp.stack([hs, jnp.full_like(hs, ns)], axis=1)    # [B, 2]
+            pair = sa[lanes[:, None], hb[:, None], rows]
+            own, bv, oth = pair[:, 0], pair[:, 1], None
+        else:
+            bv = sa[lanes, hb, ns]                          # [B, SA_F]
+            os_ = bv[:, L.BK_OPEN_SA]
+            so = jnp.where(os_ != _NEG, os_, 0)             # gather-safe
+            rows = jnp.stack([so, hs], axis=1)
+            pair = sa[lanes[:, None], hb[:, None], rows]     # [B, 2, SA_F]
+            oth, own = pair[:, 0], pair[:, 1]
+            rows = jnp.concatenate([rows, jnp.full_like(hs, ns)[:, None]], 1)
+        req = dict(subarray=hs, row=hw, is_write=hwr, vis=vis)
+        own_new, oth_new, bv_new, act_hist, col, comp, flags = \
+            _engine._step_math_lanes(policy, t, own, oth, bv,
+                                     state["act_hist"], state["col"], req)
+        if is_masa:
+            # (lane, bank, row) triples are globally unique here (hs != ns
+            # always), so a direct unique-indices set is legal and skips the
+            # scatter's duplicate handling
+            upd = jnp.stack([own_new, bv_new], axis=1)
+            sa = sa.at[lanes[:, None], hb[:, None], rows].set(
+                upd, mode="promise_in_bounds", unique_indices=True)
+            extra = flags["sasel"]
+        else:
+            # so == hs duplicates arise when the other-row gate is off; the
+            # gate-off delta is exactly zero, so scatter-ADD is well-defined
+            # where an ordered .set sequence would be needed otherwise
+            upd = jnp.stack([oth_new - oth, own_new - own, bv_new - bv],
+                            axis=1)
+            sa = sa.at[lanes[:, None], hb[:, None], rows].add(
+                upd, mode="promise_in_bounds")
+            extra = flags["pre_oth"]
+        ring = jax.lax.dynamic_update_slice(ring, comp[None],
+                                            (i % _RING, zero))
+        new = dict(sa=sa, act_hist=act_hist, col=col, ring=ring,
+                   comp_last=comp, vis_prev=vis)
+        y = jnp.stack([flags["t_col"], comp, vis, i32(flags["hit"]),
+                       i32(flags["pre_own"]), i32(extra)], axis=1)
+        return new, y
+
+    final, ys = jax.lax.scan(step, state0, xs, unroll=unroll)  # ys [N, B, YS_F]
+
+    # ---- counter reconstruction (vectorized over [N, B], once) ------------
+    iw = is_write.T != 0
+    t_col, comp, vis = ys[..., Y_TCOL], ys[..., Y_COMP], ys[..., Y_VIS]
+    hit, pre_own, extra = ys[..., Y_HIT], ys[..., Y_PREOWN], ys[..., Y_EXTRA]
+    n_wr = jnp.sum(i32(iw), axis=0)
+    n_hit = jnp.sum(hit, axis=0)
+    n_pre_own = jnp.sum(pre_own, axis=0)
+    zcol = jnp.zeros((B,), jnp.int32)
+    n_pre_oth = zcol if is_masa else jnp.sum(extra, axis=0)
+    n_sasel = jnp.sum(extra, axis=0) if is_masa else zcol
+    # subarray-open-count integral: open count BEFORE step i is the
+    # exclusive cumsum of the per-step deltas; the integration checkpoint
+    # (reference's SC_LAST_OPEN_TIME) is the running max of t_col
+    delta = (1 - hit) - pre_own - (0 if is_masa else extra)
+    zrow = jnp.zeros((1, B), jnp.int32)
+    oc_before = jnp.concatenate([zrow, jnp.cumsum(delta, axis=0)[:-1]], 0)
+    open_prev = jnp.concatenate([zrow, jax.lax.cummax(t_col, axis=0)[:-1]], 0)
+    sa_open = jnp.sum(jnp.maximum(oc_before - 1, 0)
+                      * jnp.maximum(t_col - open_prev, 0), axis=0)
+    return _engine.SimResult(
+        total_cycles=jnp.maximum(jnp.max(comp, axis=0), final["vis_prev"]),
+        n_requests=jnp.full((B,), N, jnp.int32),
+        n_act=jnp.int32(N) - n_hit,
+        n_pre=n_pre_oth + n_pre_own,
+        n_rd=jnp.int32(N) - n_wr, n_wr=n_wr,
+        n_sasel=n_sasel, n_hit=n_hit,
+        sum_latency=jnp.sum(jnp.where(iw, 0, comp - vis), axis=0),
+        n_reads=jnp.int32(N) - n_wr,
+        sa_open_cycles=sa_open)

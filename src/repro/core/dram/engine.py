@@ -55,6 +55,9 @@ _NEG = L.NEG
 _RING = 64  # completion ring size; controller.validate_mlp_window enforces
             # mlp_window < _RING at every simulate* entry
 
+#: Valid ``SimConfig.backend`` values (see the field's docstring).
+BACKENDS = frozenset({"scan", "pallas", "pallas-interpret"})
+
 
 @dataclasses.dataclass(frozen=True)
 class SimConfig:
@@ -112,8 +115,30 @@ class SimConfig:
     # ``simulate_commands`` entry points; the default-off path traces the
     # exact op graph it always did — bit-identical results, zero overhead.
     emit_commands: bool = False
+    # Execution backend for the controller scan (docs/kernels.md):
+    #   "scan"             — the packed `lax.scan` (XLA). The batched entry
+    #                        points additionally take the lane-vectorized
+    #                        single-scan fast path when eligible (refresh
+    #                        off, open rows); bit-identical either way.
+    #   "pallas"           — the fused Pallas kernel
+    #                        (:mod:`repro.core.dram.pallas_step`): batch dim
+    #                        as the kernel grid axis, the packed state
+    #                        carried in-kernel across all steps. Compiles
+    #                        via Mosaic on TPU.
+    #   "pallas-interpret" — the same kernel with ``interpret=True`` so CPU
+    #                        CI executes the kernel's op graph without a
+    #                        TPU; the parity contract is enforced on this
+    #                        path.
+    # A *static* axis: part of cache keys / bucket signatures like every
+    # other field. The Pallas backends refuse ``emit_commands`` (the kernel
+    # carries no per-step command log) — use backend="scan" for exports.
+    backend: str = "scan"
 
     def __post_init__(self) -> None:
+        if self.backend not in BACKENDS:
+            raise ValueError(
+                f"SimConfig.backend must be one of {sorted(BACKENDS)}; got "
+                f"{self.backend!r}")
         # Canonicalize the deprecated boolean pair into refresh_policy and
         # null the pair, so semantically-equal configs are field-identical:
         # astuple/asdict — and therefore result-cache keys and vmap bucket
@@ -189,45 +214,33 @@ def _bank_state0(nb: int, ns: int) -> dict:
     )
 
 
-def _timing_step(policy: int, t: DramTiming, refresh_mode: int,
-                 state: dict, req: dict,
-                 closed_row: bool = False, emit: bool = False):
-    """Serve one scheduled request against the bank state; return completion.
+def _step_math(policy: int, t: DramTiming, refresh_mode: int,
+               bk, act_hist, sc, req: dict,
+               closed_row: bool = False, emit: bool = False):
+    """The pure math phase of :func:`_timing_step`, on the gathered block.
 
-    ``req`` carries the request fields (``bank/subarray/row/is_write``), the
-    controller-computed visibility cycle ``vis`` (gap / dependence / ROB /
-    refresh blocking already folded in), and — when ``refresh_mode`` — the
-    controller's refresh directive for the target bank (``ref_pending``,
-    ``ref_target``: close the refreshed row(s) this step). ``refresh_mode``:
-    0 = off; 1 = blocking all-bank refresh (baseline DRAM); 2 = DSARP-style
-    subarray refresh (paper Sec. 6.1).
+    ``bk`` is the target bank's ``[ns + 1, SA_F]`` block (bank-vector row
+    riding at index ``ns``), ``act_hist``/``sc`` the two scalar packs.
+    Returns ``(new_bk, new_act_hist, new_sc, comp)`` — plus the command-log
+    block when ``emit``. No gathers of the full plane and no scatters: the
+    memory movement around this function is the caller's contract, which is
+    exactly what lets three executors share ONE source of timing truth:
 
-    Gather/scatter contract: exactly ONE ``dynamic_slice`` of the target
-    bank's ``[ns + 1, SA_F]`` block in (the bank-vector row rides along),
-    one ``[2, SA_F]`` indexed gather of the own/other subarray rows, and
-    exactly ONE ``dynamic_update_slice`` out. Every conditional update is
-    an unconditional write of ``jnp.where(cond, new, old)`` — never a
-    ``where`` over a full array copy.
-
-    ``emit`` (static, default off) additionally returns a packed
-    ``[slots, CMD_F]`` int32 command-log block (state_layout ``CMD_*`` /
-    ``OP_*``) — one slot per command the step may issue, ``OP_NOP`` marking
-    the unused ones. The gate is a pure Python branch: the ``emit=False``
-    path traces exactly the ops it always did (bit-identical results, no
-    perf cost). Decode lives in :mod:`repro.core.dram.commands`.
+    * :func:`_timing_step` (the scan step) wraps it in the historical
+      ``dynamic_slice`` / ``dynamic_update_slice`` pair;
+    * the Pallas kernel (:mod:`repro.core.dram.pallas_step`) calls it on a
+      block sliced from the kernel-resident state, per grid lane;
+    * the lane-vectorized batched scan (``controller._simulate_stacked_lanes``)
+      cross-checks its row-wise reformulation against ``jax.vmap`` of this.
     """
     b, s, w = req["bank"], req["subarray"], req["row"]
     is_wr, vis = req["is_write"], req["vis"]
 
     is_masa = policy == Policy.MASA
-    sa, sc = state["sa"], state["scalars"]
-    ns_p1 = sa.shape[1]          # ns subarrays + the bank-vector row
+    ns_p1 = bk.shape[0]          # ns subarrays + the bank-vector row
     ns = ns_p1 - 1
     zero = jnp.int32(0)
 
-    # ---- ONE gather of the target bank --------------------------------------
-    bk = jax.lax.dynamic_slice(sa, (b, zero, zero),
-                               (1, ns_p1, L.SA_F))[0]    # [ns + 1, SA_F]
     bv = bk[ns]                                          # bank-vector row
     designated, os_, last_act_bank = (bv[L.BK_DESIGNATED], bv[L.BK_OPEN_SA],
                                       bv[L.BK_LAST_ACT])
@@ -255,8 +268,8 @@ def _timing_step(policy: int, t: DramTiming, refresh_mode: int,
     # ---- ACTIVATE timing
     t_act = jnp.maximum(vis, own[L.SA_PRE_DONE])                 # own subarray precharged
     t_act = jnp.maximum(t_act, last_act_bank + t.t_rrd_sa)
-    t_act = jnp.maximum(t_act, state["act_hist"][3] + t.t_rrd)   # global ACT-ACT
-    t_act = jnp.maximum(t_act, state["act_hist"][0] + t.t_faw)   # four-ACT window
+    t_act = jnp.maximum(t_act, act_hist[3] + t.t_rrd)            # global ACT-ACT
+    t_act = jnp.maximum(t_act, act_hist[0] + t.t_faw)            # four-ACT window
     # own-subarray conflict: full PRE -> tRP -> ACT serialization (all policies)
     t_act = jnp.where(pre_own_needed, jnp.maximum(t_act, t_pre_own + t.t_rp), t_act)
     # cross-subarray coupling with the other subarray's PRE:
@@ -331,8 +344,7 @@ def _timing_step(policy: int, t: DramTiming, refresh_mode: int,
     wrr_done = jnp.where(act_m, 0, wrr_done)
     last_act_new = jnp.where(act_needed, t_act, last_act_bank)
     act_hist = jnp.where(
-        act_needed, jnp.concatenate([state["act_hist"][1:], t_act[None]]),
-        state["act_hist"])
+        act_needed, jnp.concatenate([act_hist[1:], t_act[None]]), act_hist)
 
     # write recovery bookkeeping (after the column command)
     wrr_done = jnp.where(own_m & is_wr,
@@ -376,14 +388,13 @@ def _timing_step(policy: int, t: DramTiming, refresh_mode: int,
         open_sa_new = _NEG
         open_count = open_count - jnp.where(act_needed, 1, 0)
 
-    # ---- ONE scatter back ---------------------------------------------------
+    # ---- rebuild the block + scalar pack ------------------------------------
     i32 = lambda x: jnp.asarray(x, jnp.int32)  # noqa: E731
     new_bk = jnp.stack([open_row, act_done, ras_done, wrr_done, pre_done],
                        axis=1)  # [ns + 1, SA_F]
     new_bv = jnp.stack([i32(designated_new), i32(open_sa_new), last_act_new,
                         zero, zero])
     new_bk = new_bk.at[ns].set(new_bv)  # static index: rebuilt bank-vector row
-    new_sa = jax.lax.dynamic_update_slice(sa, new_bk[None], (b, zero, zero))
     new_sc = jnp.stack([
         t_col,                                               # SC_COL_LAST
         i32(is_wr),                                          # SC_COL_LAST_WR
@@ -403,11 +414,8 @@ def _timing_step(policy: int, t: DramTiming, refresh_mode: int,
         jnp.maximum(sc[L.SC_MAX_COMP], comp),                # SC_MAX_COMP
     ])
 
-    new = dict(state)
-    new["sa"] = new_sa
-    new["act_hist"], new["scalars"] = act_hist, new_sc
     if not emit:
-        return new, comp
+        return new_bk, act_hist, new_sc, comp
 
     # ---- packed command-log block (SimConfig.emit_commands) ----------------
     # One [CMD_F] row per command slot; a slot whose condition is off carries
@@ -433,7 +441,194 @@ def _timing_step(policy: int, t: DramTiming, refresh_mode: int,
     ]
     if closed_row:
         slots.append(rec(jnp.bool_(True), L.OP_PREA, auto_pre, s, w))
-    return new, comp, jnp.stack(slots)
+    return new_bk, act_hist, new_sc, comp, jnp.stack(slots)
+
+
+def _timing_step(policy: int, t: DramTiming, refresh_mode: int,
+                 state: dict, req: dict,
+                 closed_row: bool = False, emit: bool = False):
+    """Serve one scheduled request against the bank state; return completion.
+
+    ``req`` carries the request fields (``bank/subarray/row/is_write``), the
+    controller-computed visibility cycle ``vis`` (gap / dependence / ROB /
+    refresh blocking already folded in), and — when ``refresh_mode`` — the
+    controller's refresh directive for the target bank (``ref_pending``,
+    ``ref_target``: close the refreshed row(s) this step). ``refresh_mode``:
+    0 = off; 1 = blocking all-bank refresh (baseline DRAM); 2 = DSARP-style
+    subarray refresh (paper Sec. 6.1).
+
+    Gather/scatter contract: exactly ONE ``dynamic_slice`` of the target
+    bank's ``[ns + 1, SA_F]`` block in (the bank-vector row rides along),
+    one ``[2, SA_F]`` indexed gather of the own/other subarray rows, and
+    exactly ONE ``dynamic_update_slice`` out. Every conditional update is
+    an unconditional write of ``jnp.where(cond, new, old)`` — never a
+    ``where`` over a full array copy. The math between the two lives in
+    :func:`_step_math`, shared verbatim with the Pallas kernel backend.
+
+    ``emit`` (static, default off) additionally returns a packed
+    ``[slots, CMD_F]`` int32 command-log block (state_layout ``CMD_*`` /
+    ``OP_*``) — one slot per command the step may issue, ``OP_NOP`` marking
+    the unused ones. The gate is a pure Python branch: the ``emit=False``
+    path traces exactly the ops it always did (bit-identical results, no
+    perf cost). Decode lives in :mod:`repro.core.dram.commands`.
+    """
+    b = req["bank"]
+    sa = state["sa"]
+    ns_p1 = sa.shape[1]
+    zero = jnp.int32(0)
+    bk = jax.lax.dynamic_slice(sa, (b, zero, zero),
+                               (1, ns_p1, L.SA_F))[0]    # [ns + 1, SA_F]
+    out = _step_math(policy, t, refresh_mode, bk, state["act_hist"],
+                     state["scalars"], req, closed_row=closed_row, emit=emit)
+    new_bk, act_hist, new_sc, comp = out[:4]
+    new = dict(state)
+    new["sa"] = jax.lax.dynamic_update_slice(sa, new_bk[None], (b, zero, zero))
+    new["act_hist"], new["scalars"] = act_hist, new_sc
+    if not emit:
+        return new, comp
+    return new, comp, out[4]
+
+
+def _step_math_lanes(policy: int, t: DramTiming, own, oth, bv, act_hist, col,
+                     req: dict):
+    """Row-wise, lane-batched reformulation of :func:`_step_math`.
+
+    Fast-path configurations only: refresh off, open-row policy, no command
+    emission. Under those, one step can change exactly three rows of the
+    packed plane — the request's own subarray ``s``, the previously open
+    subarray ``so`` (non-MASA precharge coupling), and the bank-vector row —
+    so instead of masked ``[ns + 1]`` column vectors over the whole gathered
+    block this variant computes just those rows, batched over ``B``
+    independent lanes (traces): ``own``/``oth``/``bv`` are ``[B, SA_F]``
+    gathered rows, ``act_hist`` is ``[B, 4]``, and every ``req`` field is a
+    ``[B]`` vector.
+
+    Only the four channel scalars the timing math actually *reads* are
+    carried (``col``: last column issue / was-it-a-write / write-data-end /
+    data-bus-free, each ``[B]``); every SimResult counter is instead
+    reconstructed after the scan from the per-step ``flags`` this returns
+    (see ``controller._simulate_stacked_lanes``) — O(N·B) vectorized work
+    once, instead of ~10 tiny accumulator ops inside every step.
+
+    Same int32 op sequence as :func:`_step_math` restricted to the three
+    rows, so the results are bit-identical to ``jax.vmap`` of the reference
+    — the stacked-vs-single parity suites in tests/test_packed_state.py pin
+    that equivalence on every policy/geometry combo.
+
+    Returns ``(own_new, oth_new, bv_new, act_hist_new, col_new, comp,
+    flags)``; ``oth_new`` is ``None`` under MASA (no cross-subarray
+    precharge — the caller skips the other row's gather and scatter
+    entirely).
+    """
+    s, w = req["subarray"], req["row"]
+    is_wr, vis = req["is_write"], req["vis"]
+    is_masa = policy == Policy.MASA
+
+    designated = bv[:, L.BK_DESIGNATED]
+    os_ = bv[:, L.BK_OPEN_SA]
+    last_act_bank = bv[:, L.BK_LAST_ACT]
+    orow = own[:, L.SA_OPEN_ROW]
+
+    hit = orow == w
+    act_needed = ~hit
+    pre_own_needed = (orow != _NEG) & act_needed
+    if is_masa:
+        pre_other_needed = jnp.zeros_like(hit)
+    else:
+        pre_other_needed = (os_ != _NEG) & (os_ != s) & act_needed
+        t_pre_other = jnp.maximum(vis, jnp.maximum(oth[:, L.SA_RAS_DONE],
+                                                   oth[:, L.SA_WRR_DONE]))
+    t_pre_own = jnp.maximum(vis, jnp.maximum(own[:, L.SA_RAS_DONE],
+                                             own[:, L.SA_WRR_DONE]))
+
+    # ---- ACTIVATE timing (same max-chain as the reference)
+    t_act = jnp.maximum(vis, own[:, L.SA_PRE_DONE])
+    t_act = jnp.maximum(t_act, last_act_bank + t.t_rrd_sa)
+    t_act = jnp.maximum(t_act, act_hist[:, 3] + t.t_rrd)
+    t_act = jnp.maximum(t_act, act_hist[:, 0] + t.t_faw)
+    t_act = jnp.where(pre_own_needed, jnp.maximum(t_act, t_pre_own + t.t_rp),
+                      t_act)
+    if policy == Policy.BASELINE or policy == Policy.IDEAL:
+        t_act = jnp.where(pre_other_needed,
+                          jnp.maximum(t_act, t_pre_other + t.t_rp), t_act)
+    elif policy == Policy.SALP1:
+        t_act = jnp.where(pre_other_needed,
+                          jnp.maximum(t_act, t_pre_other + 1), t_act)
+
+    # ---- column command
+    t_col = jnp.where(hit, jnp.maximum(vis, own[:, L.SA_ACT_DONE]),
+                      t_act + t.t_rcd)
+    if policy == Policy.SALP2:
+        t_col = jnp.where(pre_other_needed,
+                          jnp.maximum(t_col, t_pre_other + 1), t_col)
+    sasel_needed = jnp.bool_(is_masa) & hit & (designated != s)
+    t_col = jnp.where(sasel_needed, t_col + t.t_sa, t_col)
+    col_last, col_last_wr = col["col_last"], col["col_last_wr"]
+    t_col = jnp.maximum(t_col, col_last + t.t_ccd)
+    t_col = jnp.where(~is_wr & col_last_wr,
+                      jnp.maximum(t_col, col["wr_data_end"] + t.t_wtr), t_col)
+    t_col = jnp.where(is_wr & ~col_last_wr,
+                      jnp.maximum(t_col, col_last + t.t_rtw), t_col)
+    lat = jnp.where(is_wr, t.t_cwl, t.t_cl)
+    t_col = jnp.maximum(t_col, col["bus_free"] - lat)
+    data_start = t_col + lat
+    data_end = data_start + t.t_bl
+    comp = jnp.where(is_wr, t_col, data_end)
+
+    col_new = dict(col_last=t_col, col_last_wr=is_wr,
+                   wr_data_end=jnp.where(is_wr, data_end,
+                                         col["wr_data_end"]),
+                   bus_free=data_end)
+
+    # ---- the three changed rows -------------------------------------------
+    # Other subarray (non-MASA): PRE closes it. Identity when the gate is
+    # off; when ``so == s`` (gate necessarily off: pre_other requires
+    # os_ != s) the own row is scattered after this one and wins.
+    if is_masa:
+        oth_new = None
+    else:
+        oth_new = jnp.stack([
+            jnp.where(pre_other_needed, _NEG, oth[:, L.SA_OPEN_ROW]),
+            oth[:, L.SA_ACT_DONE],
+            oth[:, L.SA_RAS_DONE],
+            oth[:, L.SA_WRR_DONE],
+            jnp.where(pre_other_needed, t_pre_other + t.t_rp,
+                      oth[:, L.SA_PRE_DONE]),
+        ], axis=1)
+
+    # Own subarray: the reference's own_pre_m sets open_row = NEG, but
+    # pre_own_needed implies act_needed, so the ACT's ``w`` always wins.
+    own_open = jnp.where(act_needed, w, orow)
+    own_act = jnp.where(act_needed, t_act + t.t_rcd, own[:, L.SA_ACT_DONE])
+    own_ras = jnp.where(act_needed, t_act + t.t_ras, own[:, L.SA_RAS_DONE])
+    own_ras = jnp.where(~is_wr, jnp.maximum(own_ras, t_col + t.t_rtp), own_ras)
+    own_wrr = jnp.where(act_needed, 0, own[:, L.SA_WRR_DONE])
+    own_wrr = jnp.where(is_wr, jnp.maximum(own_wrr, data_end + t.t_wr),
+                        own_wrr)
+    own_pre = jnp.where(pre_own_needed, t_pre_own + t.t_rp,
+                        own[:, L.SA_PRE_DONE])
+    own_new = jnp.stack([own_open, own_act, own_ras, own_wrr, own_pre], axis=1)
+
+    # Bank-vector row (rebuilt wholesale, like the reference)
+    open_sa_new = os_ if is_masa else s
+    last_act_new = jnp.where(act_needed, t_act, last_act_bank)
+    zero_b = jnp.zeros_like(s)
+    bv_new = jnp.stack([s, open_sa_new, last_act_new, zero_b, zero_b], axis=1)
+
+    act_hist_new = jnp.where(
+        act_needed[:, None],
+        jnp.concatenate([act_hist[:, 1:], t_act[:, None]], axis=1), act_hist)
+
+    # per-step facts the post-scan counter reconstruction needs (raw, no
+    # int32 conversions here — the scan just stacks them). Flags that are
+    # constant-off for the policy (sasel without MASA, pre_oth under MASA)
+    # are omitted rather than stacked as all-zero [N, B] planes.
+    flags = dict(t_col=t_col, hit=hit, pre_own=pre_own_needed)
+    if is_masa:
+        flags["sasel"] = sasel_needed
+    else:
+        flags["pre_oth"] = pre_other_needed
+    return own_new, oth_new, bv_new, act_hist_new, col_new, comp, flags
 
 
 def _controller_args(policy: Policy, config: SimConfig):
@@ -468,6 +663,19 @@ def simulate(trace: Trace, policy: Policy, config: SimConfig = SimConfig()) -> S
     controller.validate_mlp_window(trace.mlp_window)
     eff, sched, nb, ns = _controller_args(policy, config)
     tr = to_ideal(trace, config.n_banks, config.n_subarrays) if policy == Policy.IDEAL else trace
+    if config.backend != "scan":
+        # fused Pallas lane kernel, B = 1 (docs/kernels.md); interpret=True
+        # executes the kernel's op graph on CPU — the CI parity path
+        from repro.core.dram import pallas_step
+        res, _ = pallas_step._simulate_lanes_pallas(
+            eff, nb, ns, config.timing, config.refresh_mode,
+            jnp.asarray(tr.bank)[None], jnp.asarray(tr.subarray)[None],
+            jnp.asarray(tr.row)[None], jnp.asarray(tr.is_write)[None],
+            jnp.asarray(tr.gap)[None], jnp.asarray(tr.dep)[None],
+            jnp.asarray([trace.mlp_window], jnp.int32),
+            closed_row=config.row_policy == "closed",
+            interpret=config.backend == "pallas-interpret")
+        return jax.tree_util.tree_map(lambda x: x[0], res)
     res, _ = controller._simulate_controller(
         eff, sched, nb, ns, config.timing, config.refresh_mode,
         jnp.asarray(tr.bank)[None], jnp.asarray(tr.subarray)[None],
@@ -499,6 +707,36 @@ def simulate_stacked(stacked: dict, policy: Policy,
         # to_ideal() on stacked arrays: every subarray becomes a real bank
         bank = bank * config.n_subarrays + subarray
         subarray = jnp.zeros_like(subarray)
+    if config.backend != "scan":
+        # fused Pallas lane kernel: the batch dimension is the kernel grid
+        # axis, no outer vmap (docs/kernels.md). Refuses emit_commands.
+        from repro.core.dram import pallas_step
+        pallas_step.check_no_emit(config)
+        res, _ = pallas_step._simulate_lanes_pallas(
+            eff, nb, ns, config.timing, config.refresh_mode,
+            bank, subarray,
+            jnp.asarray(stacked["row"]), jnp.asarray(stacked["is_write"]),
+            jnp.asarray(stacked["gap"]), jnp.asarray(stacked["dep"]),
+            jnp.asarray(stacked["mlp_window"], jnp.int32),
+            closed_row=config.row_policy == "closed",
+            interpret=config.backend == "pallas-interpret")
+        return res
+    if (config.refresh_mode == 0 and config.row_policy == "open"
+            and not config.emit_commands):
+        # lane-vectorized single-scan fast path (bit-identical; see
+        # controller._simulate_stacked_lanes for the eligibility contract).
+        # A batch-uniform mlp_window (the common case) is promoted to a
+        # static scalar so the completion ring becomes contiguous slices.
+        import numpy as np
+        mw = np.asarray(stacked["mlp_window"])
+        mlp_static = int(mw.flat[0]) if (mw == mw.flat[0]).all() else None
+        return controller._simulate_stacked_lanes(
+            eff, nb, ns, config.timing,
+            bank, subarray,
+            jnp.asarray(stacked["row"]), jnp.asarray(stacked["is_write"]),
+            jnp.asarray(stacked["gap"]), jnp.asarray(stacked["dep"]),
+            jnp.asarray(stacked["mlp_window"], jnp.int32),
+            mlp_static=mlp_static)
     fn = functools.partial(controller._simulate_controller, eff, sched, nb, ns,
                            config.timing, config.refresh_mode,
                            closed_row=config.row_policy == "closed")

@@ -107,11 +107,24 @@ def simulate_multicore_batch(mixes: list[list[Trace]], policy: Policy,
     ranks = jnp.asarray(np.stack([r for _, r in prepped]))
     controller.validate_mlp_window(stacked["mlp_window"])
 
-    fn = _controller_fn(eff, sched, nb, ns, config)
-    shared, core_cycles = jax.vmap(fn)(
-        stacked["bank"], stacked["subarray"], stacked["row"],
-        stacked["is_write"], stacked["gap"], stacked["dep"],
-        stacked["mlp_window"], ranks)
+    if config.backend != "scan":
+        # fused Pallas mix kernel: the mix dimension is the kernel grid
+        # axis, no outer vmap (docs/kernels.md). Refuses emit_commands.
+        from repro.core.dram import pallas_step
+        pallas_step.check_no_emit(config)
+        shared, core_cycles = pallas_step._simulate_cores_pallas(
+            eff, sched, nb, ns, config.timing, config.refresh_mode,
+            stacked["bank"], stacked["subarray"], stacked["row"],
+            stacked["is_write"], stacked["gap"], stacked["dep"],
+            stacked["mlp_window"], ranks,
+            closed_row=config.row_policy == "closed",
+            interpret=config.backend == "pallas-interpret")
+    else:
+        fn = _controller_fn(eff, sched, nb, ns, config)
+        shared, core_cycles = jax.vmap(fn)(
+            stacked["bank"], stacked["subarray"], stacked["row"],
+            stacked["is_write"], stacked["gap"], stacked["dep"],
+            stacked["mlp_window"], ranks)
 
     alone_all = (alone_cycles if alone_cycles is not None
                  else alone_baseline_cycles(mixes, config))
@@ -146,10 +159,27 @@ def simulate_multicore(traces: list[Trace], policy: Policy,
     eff, sched, nb, ns = _controller_args(policy, config)
     st, rank = _prep_mix(traces, policy, config)
     controller.validate_mlp_window(st["mlp_window"])
-    shared, core_cycles = _controller_fn(eff, sched, nb, ns, config)(
-        jnp.asarray(st["bank"]), jnp.asarray(st["subarray"]), jnp.asarray(st["row"]),
-        jnp.asarray(st["is_write"]), jnp.asarray(st["gap"]), jnp.asarray(st["dep"]),
-        jnp.asarray(st["mlp_window"]), jnp.asarray(rank))
+    if config.backend != "scan":
+        # fused Pallas mix kernel with M = 1 (docs/kernels.md)
+        from repro.core.dram import pallas_step
+        pallas_step.check_no_emit(config)
+        shared, core_cycles = pallas_step._simulate_cores_pallas(
+            eff, sched, nb, ns, config.timing, config.refresh_mode,
+            jnp.asarray(st["bank"])[None], jnp.asarray(st["subarray"])[None],
+            jnp.asarray(st["row"])[None], jnp.asarray(st["is_write"])[None],
+            jnp.asarray(st["gap"])[None], jnp.asarray(st["dep"])[None],
+            jnp.asarray(st["mlp_window"], jnp.int32)[None],
+            jnp.asarray(rank)[None],
+            closed_row=config.row_policy == "closed",
+            interpret=config.backend == "pallas-interpret")
+        shared = jax.tree_util.tree_map(lambda x: x[0], shared)
+        core_cycles = core_cycles[0]
+    else:
+        shared, core_cycles = _controller_fn(eff, sched, nb, ns, config)(
+            jnp.asarray(st["bank"]), jnp.asarray(st["subarray"]),
+            jnp.asarray(st["row"]), jnp.asarray(st["is_write"]),
+            jnp.asarray(st["gap"]), jnp.asarray(st["dep"]),
+            jnp.asarray(st["mlp_window"]), jnp.asarray(rank))
     alone = alone_baseline_cycles([traces], config)
     return MulticoreResult(shared=shared,
                            core_cycles=np.asarray(core_cycles, np.float64),

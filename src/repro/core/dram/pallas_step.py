@@ -1,0 +1,193 @@
+"""Pallas-fused controller backends (``SimConfig.backend``, docs/kernels.md).
+
+The packed-state controller scan (:mod:`repro.core.dram.controller`) runs
+one `lax.scan` step per served request: a tiny gather / compute / scatter
+chain over the ``[nb, ns + 1, SA_F]`` plane that XLA executes as dozens of
+micro-kernels with the state bouncing through memory between them. The two
+`pallas_call` wrappers here fuse the WHOLE trace into one kernel invocation
+per batch element:
+
+* **lane kernel** (:func:`_simulate_lanes_pallas`) — batched single-core
+  simulation. Grid = (B,), one program per trace lane; the program reads
+  its ``[N, XS_F]`` request block, then runs the controller's C == 1 step
+  (:func:`controller._build_step1` — the SAME function the scan executes)
+  in a ``fori_loop`` whose carry holds the packed bank/subarray plane, the
+  completion ring, and (when refreshing) the refresh table for the entire
+  trace. The batch dimension is the kernel grid axis instead of an outer
+  ``vmap``, and only the final ``[SC_F]`` scalar pack leaves the kernel.
+* **mix kernel** (:func:`_simulate_cores_pallas`) — multicore mixes.
+  Grid = (M,); each program runs the general C-core step
+  (:func:`controller._build_stepC`) — scheduler argmin, per-core rings,
+  refresh directives and all — for ``C * N`` fused steps.
+
+Parity contract: the kernels do not reimplement any timing math — they are
+``fori_loop`` instantiations of the exact step builders the `lax.scan`
+backend instantiates, so every refresh mode, row policy, scheduler, and
+policy rung is bit-identical by construction. tests/test_packed_state.py
+enforces this over the full 372-cell golden fixture with
+``backend="pallas-interpret"`` (``interpret=True`` executes the kernel's op
+graph through XLA on CPU — the CI story; ``backend="pallas"`` hands the
+same kernel to the Mosaic TPU compiler). The Pallas backends refuse
+``emit_commands``: the kernel carries no per-step command log (only the
+final scalar pack leaves the kernel), so the dispatch layers raise instead
+of silently dropping the export — use ``backend="scan"``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.dram import controller as _controller
+from repro.core.dram import engine as _engine
+from repro.core.dram import state_layout as L
+from repro.core.dram.timing import DramTiming
+
+#: Human-readable refusal reason, shared by every dispatch site.
+EMIT_COMMANDS_ERROR = (
+    "The Pallas backends refuse emit_commands: the kernel keeps the "
+    "per-step state in-kernel and returns only the final counters, so "
+    "there is no per-step command log to decode — use backend='scan' "
+    "for command-stream exports (docs/kernels.md#parity-contract).")
+
+
+def check_no_emit(config) -> None:
+    """Raise if a Pallas backend is combined with ``emit_commands``."""
+    if config.backend != "scan" and config.emit_commands:
+        raise ValueError(EMIT_COMMANDS_ERROR)
+
+
+def _lane_kernel(policy: int, t: DramTiming, refresh_mode: int,
+                 closed_row: bool, n_banks: int, n_subarrays: int, N: int):
+    """Kernel body factory for the batched single-core (lane) kernel."""
+
+    def kernel(xs_ref, mlp_ref, sc_ref, vis_ref, max_ref):
+        xs = xs_ref[0]                         # [N, XS_F] this lane's trace
+        fns = _controller._refresh_fns(policy, t, n_subarrays, refresh_mode,
+                                       False)
+        step1 = _controller._build_step1(policy, t, refresh_mode, closed_row,
+                                         False, mlp_ref[0, 0], fns)
+        state0 = _controller._state1_init(n_banks, n_subarrays, t,
+                                          refresh_mode)
+
+        def body(i, state):
+            x = jax.lax.dynamic_slice(xs, (i, 0), (1, L.XS_F))[0]
+            new, _ = step1(state, x)
+            return new
+
+        final = jax.lax.fori_loop(0, N, body, state0)
+        sc_ref[0] = final["bank"]["scalars"]
+        vis_ref[0, 0] = final["vis_prev"]
+        max_ref[0, 0] = final["max_comp"]
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("policy", "n_banks",
+                                             "n_subarrays", "timing",
+                                             "refresh_mode", "closed_row",
+                                             "interpret"))
+def _simulate_lanes_pallas(policy: int, n_banks: int, n_subarrays: int,
+                           timing: DramTiming, refresh_mode: int,
+                           bank, subarray, row, is_write, gap, dep,  # [B, N]
+                           mlp_window,                               # [B]
+                           closed_row: bool = False,
+                           interpret: bool = True):
+    """B single-core traces, one kernel program per lane.
+
+    Returns ``(SimResult with [B] fields, max_comp [B])`` — the same shapes
+    the vmapped scan path produces, so the entry points swap backends
+    without touching result handling.
+    """
+    B, N = bank.shape
+    idx = jnp.broadcast_to(jnp.arange(N, dtype=jnp.int32), (B, N))
+    xs = jnp.stack([idx, bank, subarray, row,
+                    is_write.astype(jnp.int32), gap,
+                    dep.astype(jnp.int32)], axis=-1)         # [B, N, XS_F]
+    mlp = jnp.asarray(mlp_window, jnp.int32).reshape(B, 1)
+    sc, vis, maxc = pl.pallas_call(
+        _lane_kernel(policy, timing, refresh_mode, closed_row, n_banks,
+                     n_subarrays, N),
+        grid=(B,),
+        in_specs=[pl.BlockSpec((1, N, L.XS_F), lambda b: (b, 0, 0)),
+                  pl.BlockSpec((1, 1), lambda b: (b, 0))],
+        out_specs=[pl.BlockSpec((1, L.SC_F), lambda b: (b, 0)),
+                   pl.BlockSpec((1, 1), lambda b: (b, 0)),
+                   pl.BlockSpec((1, 1), lambda b: (b, 0))],
+        out_shape=[jax.ShapeDtypeStruct((B, L.SC_F), jnp.int32),
+                   jax.ShapeDtypeStruct((B, 1), jnp.int32),
+                   jax.ShapeDtypeStruct((B, 1), jnp.int32)],
+        interpret=interpret,
+    )(xs, mlp)
+    res = jax.vmap(lambda s, v: _engine.result_from_state(N, s, v))(
+        sc, vis[:, 0])
+    return res, maxc[:, 0]
+
+
+def _mix_kernel(policy: int, scheduler: int, t: DramTiming,
+                refresh_mode: int, closed_row: bool, n_banks: int,
+                n_subarrays: int, C: int, N: int):
+    """Kernel body factory for the multicore (mix) kernel."""
+
+    def kernel(reqs_ref, mlp_ref, rank_ref, sc_ref, vis_ref, max_ref):
+        reqs = reqs_ref[0]                     # [C, N, RQ_F] this mix
+        fns = _controller._refresh_fns(policy, t, n_subarrays, refresh_mode,
+                                       False)
+        step = _controller._build_stepC(policy, scheduler, t, refresh_mode,
+                                        closed_row, False, reqs,
+                                        mlp_ref[0], rank_ref[0], fns)
+        state0 = _controller._stateC_init(n_banks, n_subarrays, t,
+                                          refresh_mode, C)
+
+        def body(i, state):
+            new, _ = step(state, None)
+            return new
+
+        final = jax.lax.fori_loop(0, C * N, body, state0)
+        sc_ref[0] = final["bank"]["scalars"]
+        vis_ref[0] = final["core"][:, L.CORE_VIS_PREV]
+        max_ref[0] = final["core"][:, L.CORE_MAX_COMP]
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("policy", "scheduler", "n_banks",
+                                             "n_subarrays", "timing",
+                                             "refresh_mode", "closed_row",
+                                             "interpret"))
+def _simulate_cores_pallas(policy: int, scheduler: int, n_banks: int,
+                           n_subarrays: int, timing: DramTiming,
+                           refresh_mode: int,
+                           bank, subarray, row, is_write, gap, dep,  # [M,C,N]
+                           mlp_window, rank,                         # [M, C]
+                           closed_row: bool = False,
+                           interpret: bool = True):
+    """M multicore mixes of C cores each, one kernel program per mix.
+
+    Returns ``(SimResult with [M] fields, per-core max completion [M, C])``
+    — what ``jax.vmap`` of the scan controller over mixes produces.
+    """
+    M, C, N = bank.shape
+    reqs = _controller._pack_reqs(bank, subarray, row, is_write, gap, dep)
+    mlp = jnp.asarray(mlp_window, jnp.int32)
+    rank = jnp.asarray(rank, jnp.int32)
+    sc, vis, maxc = pl.pallas_call(
+        _mix_kernel(policy, scheduler, timing, refresh_mode, closed_row,
+                    n_banks, n_subarrays, C, N),
+        grid=(M,),
+        in_specs=[pl.BlockSpec((1, C, N, L.RQ_F), lambda m: (m, 0, 0, 0)),
+                  pl.BlockSpec((1, C), lambda m: (m, 0)),
+                  pl.BlockSpec((1, C), lambda m: (m, 0))],
+        out_specs=[pl.BlockSpec((1, L.SC_F), lambda m: (m, 0)),
+                   pl.BlockSpec((1, C), lambda m: (m, 0)),
+                   pl.BlockSpec((1, C), lambda m: (m, 0))],
+        out_shape=[jax.ShapeDtypeStruct((M, L.SC_F), jnp.int32),
+                   jax.ShapeDtypeStruct((M, C), jnp.int32),
+                   jax.ShapeDtypeStruct((M, C), jnp.int32)],
+        interpret=interpret,
+    )(reqs, mlp, rank)
+    res = jax.vmap(lambda s, v: _engine.result_from_state(C * N, s, v))(
+        sc, vis)
+    return res, maxc

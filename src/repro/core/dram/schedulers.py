@@ -27,23 +27,24 @@ from __future__ import annotations
 import enum
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.dram import state_layout as L
 
 #: Tier spacing. Must exceed any realistic visibility cycle so tiers are
 #: strict; small enough that key arithmetic stays within int32 (the TCM
 #: rank subtraction can reach -2 * _BIG, the SALP miss tier +2 * _BIG).
-_BIG = jnp.int32(1 << 28)
+_BIG = np.int32(1 << 28)
 
 #: Key assigned to cores whose stream is exhausted — larger than any live key.
-_DEAD = jnp.int32(2_000_000_000)
+_DEAD = np.int32(2_000_000_000)
 
 #: Refresh-urgency boost (DARP): subtracted from the key of pending requests
 #: to a bank whose postponed-refresh debt is one step from forcing a blocking
 #: burst, so the bank's queue drains before the forced refresh would stall
 #: it. Strictly outranks every tier including TCM's ranking boost; the worst
 #: composed key (TCM latency-sensitive + urgent) stays within int32.
-_REF_URGENT = jnp.int32(4) * _BIG
+_REF_URGENT = np.int32(4) * _BIG
 
 
 class Scheduler(enum.IntEnum):

@@ -26,10 +26,12 @@ Booleans (``SC_COL_LAST_WR``) are stored as 0/1 int32; row ids use
 """
 from __future__ import annotations
 
-import jax.numpy as jnp
+import numpy as np
 
 #: "no open row / no open subarray" sentinel.
-NEG = jnp.int32(-1)
+NEG = np.int32(-1)  # numpy scalar, not a jax array: a jaxpr
+# literal, so kernel bodies (pallas_step) can close over it without
+# tripping pallas_call's captured-constant check
 
 # ---- sa: [nb, ns + 1, SA_F] per-subarray timing plane ----------------------
 SA_OPEN_ROW = 0    # row latched in this subarray's local buffer (NEG = none)

@@ -24,6 +24,7 @@ LOCAL_ARTIFACTS = {
     "mapping": REPO / "artifacts" / "mapping_smoke.json",
     "perf": REPO / "artifacts" / "BENCH_perf.json",
     "refresh": REPO / "artifacts" / "refresh.json",
+    "kernels": REPO / "artifacts" / "kernels.json",
 }
 
 _COMMON = {"schema_version": "repro.bench/v1", "git_sha": "f" * 40, "seed": 7}
@@ -75,6 +76,17 @@ def make_doc(suite: str) -> dict:
                                    for pol in ("BASELINE", "MASA")}
                               for gb in ("8Gb", "16Gb", "32Gb")}}},
                 "sweeps": [{"grid": {"name": "refresh"}}]}
+    if suite == "kernels":
+        return {**_COMMON,
+                "results": {"kernels": {
+                    "kernels_ok": True,
+                    "errs": {"moe_gemm": 0.0, "masa_gemm": 5e-5,
+                             "ssd_scan": 1e-7, "flash_attention": 4e-7,
+                             "paged_attention/shared_prefix": 2e-7,
+                             "paged_attention/private": 2e-7},
+                    "ladder": {"baseline": 1.0, "salp1": 1.77,
+                               "salp2": 1.77, "masa": 3.53}}},
+                "sweeps": []}
     raise AssertionError(suite)
 
 
@@ -144,6 +156,31 @@ def test_refresh_rejects_summary_side_ladder_lie():
             pens["darp"] = pens["all_bank"] + 5.0
     with pytest.raises(V.ValidationError, match="ladder violated"):
         V.validate_refresh(doc)
+
+
+def test_kernels_rejects_oracle_disagreement():
+    """An error at/above ERR_TOL must fail even when the bench-side
+    kernels_ok flag lies — the validator re-checks from the raw errs."""
+    from benchmarks.kernel_bench import ERR_TOL
+
+    doc = make_doc("kernels")
+    doc["results"]["kernels"]["errs"]["ssd_scan"] = ERR_TOL
+    with pytest.raises(V.ValidationError, match="ssd_scan"):
+        V.validate_kernels(doc)
+
+
+def test_kernels_rejects_missing_kernel():
+    doc = make_doc("kernels")
+    del doc["results"]["kernels"]["errs"]["flash_attention"]
+    with pytest.raises(V.ValidationError, match="covered"):
+        V.validate_kernels(doc)
+
+
+def test_kernels_rejects_broken_ladder():
+    doc = make_doc("kernels")
+    doc["results"]["kernels"]["ladder"]["masa"] = 0.9
+    with pytest.raises(V.ValidationError, match="ladder"):
+        V.validate_kernels(doc)
 
 
 def test_perf_guard_warns_but_does_not_fail(capsys, tmp_path):

@@ -12,19 +12,13 @@ from repro.kernels.flash_attention.ref import flash_attention_ref
 TOLS = {jnp.float32: dict(rtol=2e-4, atol=2e-4),
         jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
 
-# The whole module exercises a seed Pallas kernel (ROADMAP open item 1).
+# The whole module exercises a seed Pallas kernel, revived against the
+# installed JAX via ``repro.compat`` (the pltpu.CompilerParams rename is
+# absorbed there) — ROADMAP open item 1's toolchain-revival leg. The
+# ``seed_kernel`` marker stays for suite selection.
 pytestmark = pytest.mark.seed_kernel
 
-#: The seed kernel predates the installed JAX — `jax.experimental.pallas.tpu`
-#: renamed `CompilerParams` (now `TPUCompilerParams`), so the kernel fails at
-#: trace time. Repair rides with the Pallas hot-loop work in ROADMAP open
-#: item 1 ("Pallas-kernel hot loop + seed-kernel revival"); unskip there.
-_seed_kernel_drift = pytest.mark.skip(
-    reason="seed Pallas kernel vs installed-JAX API drift "
-           "(pltpu.CompilerParams rename) — revival is ROADMAP open item 1")
 
-
-@_seed_kernel_drift
 @pytest.mark.parametrize("bh,s,hd,bq,bk", [
     (2, 256, 64, 128, 128), (4, 512, 64, 128, 128),
     (1, 256, 128, 128, 64), (3, 384, 64, 128, 128)])
@@ -43,7 +37,6 @@ def test_kernel_sweep(bh, s, hd, bq, bk, causal, dtype):
                                np.asarray(ref, np.float32), **tol)
 
 
-@_seed_kernel_drift
 def test_gqa_wrapper_matches_model_attention():
     """flash_attention == the model's naive attention core (GQA, causal)."""
     from repro.configs.base import AttnConfig

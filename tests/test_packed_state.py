@@ -28,6 +28,13 @@ from repro.core.dram.trace import Trace, WorkloadProfile, stack_traces
 GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "data",
                            "golden_packed_state.json")
 
+#: Execution backends under test. "pallas-interpret" runs the fused Pallas
+#: kernels (repro.core.dram.pallas_step) with interpret=True — the CPU/CI
+#: leg of the bit-parity contract; "scan" is the packed lax.scan reference.
+#: The compiled "pallas" backend needs a TPU and is exercised by the same
+#: parametrization wherever one is attached.
+BACKENDS = ("scan", "pallas-interpret")
+
 #: Refresh-engaged timing for the ladder's fixture cells (see CONFIGS).
 REF_TIMING = dataclasses.replace(
     SimConfig().timing, t_refi=520, t_rfc=80, t_rfc_pb=32, ref_postpone_max=2)
@@ -88,28 +95,35 @@ def golden() -> dict:
         return json.load(f)
 
 
+@pytest.mark.parametrize("backend", BACKENDS)
 class TestGoldenParity:
-    """Bit-exact counters vs the pre-packed-state engine, 198 cells."""
+    """Bit-exact counters vs the pre-packed-state engine, 198 cells.
 
-    def test_single_core_cells(self, golden):
+    Parametrized over the backend axis: the Pallas kernels must reproduce
+    the SAME golden counters on every cell — refresh ladder, closed-row,
+    schedulers and all (the ISSUE's bit-parity acceptance criterion).
+    """
+
+    def test_single_core_cells(self, golden, backend):
         mismatches = []
         for cell in golden["single"]:
             tr = random_trace(cell["seed"])
             got = counters(simulate(tr, Policy[cell["policy"]],
-                                    SimConfig(**CONFIGS[cell["config"]])))
+                                    SimConfig(backend=backend,
+                                              **CONFIGS[cell["config"]])))
             if got != cell["counters"]:
                 mismatches.append((cell["seed"], cell["config"],
                                    cell["policy"], got, cell["counters"]))
         assert not mismatches, mismatches[:3]
 
-    def test_multicore_cells(self, golden):
+    def test_multicore_cells(self, golden, backend):
         mismatches = []
         for cell in golden["multicore"]:
             mix = [generate_trace(workload(m), 150, seed=cell["seed"],
                                   row_space_offset=ROW_SPACE_STRIDE * i)
                    for i, m in enumerate(("mcf", "lbm"))]
             cfg = SimConfig(scheduler=Scheduler[cell["scheduler"]],
-                            **CONFIGS[cell["config"]])
+                            backend=backend, **CONFIGS[cell["config"]])
             r = simulate_multicore(mix, Policy[cell["policy"]], cfg)
             got = counters(r.shared)
             cc = [int(x) for x in r.core_cycles]
@@ -117,6 +131,10 @@ class TestGoldenParity:
                 mismatches.append((cell["seed"], cell["config"],
                                    cell["scheduler"], cell["policy"]))
         assert not mismatches, mismatches
+
+
+class TestFixtureShape:
+    """Backend-independent fixture/meta checks."""
 
     def test_fixture_covers_all_axes(self, golden):
         """The fixture really spans policy x refresh x row-policy x sched."""
@@ -162,25 +180,58 @@ COMBOS = [
 
 
 def _assert_stacked_matches(seed: int, policy: Policy, cfg_name: str,
-                            mlp: int) -> None:
-    cfg = SimConfig(**CONFIGS[cfg_name])
+                            mlp: int, backend: str = "scan") -> None:
+    cfg = SimConfig(backend=backend, **CONFIGS[cfg_name])
+    ref_cfg = SimConfig(**CONFIGS[cfg_name])   # per-trace reference: scan
     # equal-length traces with one shared mlp_window: one compiled program
     traces = [random_trace(seed + i, n=64, mlp=mlp) for i in range(3)]
     stacked = simulate_stacked(stack_traces(traces), policy, cfg)
     for i, tr in enumerate(traces):
-        ref = counters(simulate(tr, policy, cfg))
+        ref = counters(simulate(tr, policy, ref_cfg))
         got = {f.name: int(np.asarray(getattr(stacked, f.name))[i])
                for f in dataclasses.fields(SimResult)}
-        assert got == ref, (policy, cfg_name, i)
+        assert got == ref, (policy, cfg_name, backend, i)
 
 
+@pytest.mark.parametrize("backend", BACKENDS)
 @pytest.mark.parametrize("combo", COMBOS,
                          ids=[f"{p.name}-{c}" for p, c in COMBOS])
-def test_stacked_equals_per_trace_simulate(combo):
+def test_stacked_equals_per_trace_simulate(combo, backend):
     """Deterministic stacked-vs-loop parity (runs without hypothesis)."""
     policy, cfg_name = combo
     _assert_stacked_matches(seed=1000 + COMBOS.index(combo), policy=policy,
-                            cfg_name=cfg_name, mlp=4)
+                            cfg_name=cfg_name, mlp=4, backend=backend)
+
+
+def test_pallas_refuses_emit_commands():
+    """emit_commands x pallas must raise, never silently drop the log."""
+    from repro.core.dram.commands import simulate_commands
+    from repro.core.dram.trace import stack_traces as _stack
+
+    tr = random_trace(5, n=16)
+    for backend in ("pallas", "pallas-interpret"):
+        cfg = SimConfig(backend=backend)
+        with pytest.raises(ValueError, match="emit_commands"):
+            simulate_commands(tr, Policy.MASA, cfg)
+        with pytest.raises(ValueError, match="emit_commands"):
+            simulate_stacked(_stack([tr]), Policy.MASA,
+                             dataclasses.replace(cfg, emit_commands=True))
+
+
+def test_scan_commands_match_pallas_counters():
+    """Cross-check: the scan path's emitted-command run must agree with the
+    kernel path's counters on the same cell (the refusal above plus this
+    equivalence is the 'refuse or match' contract for command streams)."""
+    from repro.core.dram.commands import simulate_commands
+
+    tr = random_trace(11)
+    for cfg_name in ("default", "per_bank"):
+        res_cmd, _ = simulate_commands(tr, Policy.MASA,
+                                       SimConfig(**CONFIGS[cfg_name]))
+        res_pal = simulate(tr, Policy.MASA,
+                           SimConfig(backend="pallas-interpret",
+                                     **CONFIGS[cfg_name]))
+        assert counters(res_cmd) == counters(res_pal), cfg_name
 
 
 try:
@@ -192,8 +243,8 @@ except ImportError:  # collection must degrade to a skip, never hard-error
 else:
     @settings(max_examples=12, deadline=None)
     @given(st.integers(0, 2 ** 31 - 1), st.sampled_from(range(len(COMBOS))),
-           st.integers(1, 16))
-    def test_stacked_fuzz(seed, combo_idx, mlp):
+           st.integers(1, 16), st.sampled_from(BACKENDS))
+    def test_stacked_fuzz(seed, combo_idx, mlp, backend):
         policy, cfg_name = COMBOS[combo_idx]
         _assert_stacked_matches(seed=seed, policy=policy, cfg_name=cfg_name,
-                                mlp=mlp)
+                                mlp=mlp, backend=backend)

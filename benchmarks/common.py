@@ -19,6 +19,14 @@ SEED = 7
 #: process; ``benchmarks.run`` folds them into its single bench artifact.
 SWEEPS: list[dict] = []
 
+#: Deterministic fault-injection plan (``repro.experiments.FaultPlan``) set by
+#: ``benchmarks.run --inject-faults``; threaded through every sweep so CI can
+#: exercise the retry/bisect/quarantine paths on the real pipeline.
+FAULT_PLAN = None
+
+#: Optional ``repro.experiments.ResiliencePolicy`` override for every sweep.
+RESILIENCE = None
+
 
 def mem_intensive(min_mpki: float = 9.0):
     """The memory-intensive subset (the regime where geometry matters)."""
@@ -31,10 +39,13 @@ def run_grid(grid):
 
     All benchmarks of one ``benchmarks.run`` invocation share
     ``GLOBAL_CACHE``, so a (workload, geometry, policy) cell is simulated at
-    most once per process no matter how many benchmarks touch it.
+    most once per process no matter how many benchmarks touch it. With a
+    journal-backed cache installed (``benchmarks.run --journal``) the sharing
+    extends across processes: completed cells replay from disk.
     """
     from repro.experiments import GLOBAL_CACHE, run_sweep
-    sweep = run_sweep(grid, GLOBAL_CACHE)
+    sweep = run_sweep(grid, GLOBAL_CACHE, resilience=RESILIENCE,
+                      fault_plan=FAULT_PLAN)
     SWEEPS.append(sweep.to_json())
     return sweep
 
@@ -43,7 +54,7 @@ def run_mix_grid(grid):
     """Run a MixGrid (multi-core policy x scheduler sweep), registering its
     ``repro.sweep/v1`` artifact alongside the single-core sweeps."""
     from repro.experiments import run_mix_sweep
-    sweep = run_mix_sweep(grid)
+    sweep = run_mix_sweep(grid, resilience=RESILIENCE, fault_plan=FAULT_PLAN)
     SWEEPS.append(sweep.to_json())
     return sweep
 

@@ -4,7 +4,17 @@ Usage:
     PYTHONPATH=src python -m benchmarks.run [--suite paper,sens,...]
                                             [--only fig4,fig5,...]
                                             [--out artifacts/bench.json]
+                                            [--journal artifacts/cache.jsonl]
+                                            [--inject-faults SPEC]
                                             [--list]
+
+``--journal PATH`` (or ``REPRO_CACHE_JOURNAL``) swaps the process-wide result
+cache for a journal-backed ``PersistentResultCache``: completed cells replay
+from disk, so a killed run resumes instead of restarting — and repeated runs
+across processes/PRs hit warm entries. ``--inject-faults SPEC`` (or
+``REPRO_FAULT_PLAN``; see ``repro.experiments.FaultPlan.parse`` for the
+grammar) injects deterministic per-bucket faults so CI exercises the
+retry/bisect/quarantine machinery on the real pipeline.
 
 Each registry entry is a module exposing ``run() -> dict`` (its summary).
 Benchmarks built on the sweep subsystem share one process-wide result cache,
@@ -20,6 +30,7 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import importlib
+import os
 import sys
 import time
 
@@ -90,6 +101,16 @@ def main(argv: list[str] | None = None) -> dict:
                          + ",".join(b.key for b in REGISTRY))
     ap.add_argument("--out", type=str, default="artifacts/bench.json",
                     help="path for the versioned JSON artifact ('' to disable)")
+    ap.add_argument("--journal", type=str,
+                    default=os.environ.get("REPRO_CACHE_JOURNAL", ""),
+                    help="persistent result-cache journal (JSONL); completed "
+                         "cells replay from it across processes ('' = "
+                         "in-memory only)")
+    ap.add_argument("--inject-faults", type=str, metavar="SPEC",
+                    default=os.environ.get("REPRO_FAULT_PLAN", ""),
+                    help="deterministic fault plan, e.g. "
+                         "'oom@b0:x1,raise@c4:p' (see "
+                         "repro.experiments.FaultPlan.parse)")
     ap.add_argument("--list", action="store_true", help="list registry and exit")
     args = ap.parse_args(argv)
 
@@ -108,7 +129,16 @@ def main(argv: list[str] | None = None) -> dict:
                  f"see --list")
 
     from benchmarks import common
-    from repro.experiments import GLOBAL_CACHE, bench_artifact, write_artifact
+    from repro.experiments import bench_artifact, write_artifact
+
+    if args.journal:
+        from repro.experiments import PersistentResultCache, install_global_cache
+        install_global_cache(PersistentResultCache(args.journal))
+    if args.inject_faults:
+        from repro.experiments import FaultPlan
+        common.FAULT_PLAN = FaultPlan.parse(args.inject_faults)
+
+    from repro.experiments import GLOBAL_CACHE
 
     # scope the artifact to THIS invocation: main(argv) may be called
     # repeatedly in one process (sweeps accumulate; cache stats are cumulative)
@@ -136,9 +166,15 @@ def main(argv: list[str] | None = None) -> dict:
     run_sweeps = common.SWEEPS[sweeps_start:]
     run_cache = {"entries": len(GLOBAL_CACHE), "hits": GLOBAL_CACHE.hits - hits0,
                  "misses": GLOBAL_CACHE.misses - misses0}
+    if args.journal:
+        # journal provenance: where completed cells persist, how many were
+        # replayed from a previous process
+        run_cache.update({k: v for k, v in GLOBAL_CACHE.stats().items()
+                          if k in ("journal", "loaded", "dropped")})
     doc = bench_artifact(results=summaries, sweeps=run_sweeps,
                          argv=list(argv) if argv is not None else sys.argv[1:],
-                         cache_stats=run_cache, seed=common.SEED)
+                         cache_stats=run_cache, seed=common.SEED,
+                         fault_injection=args.inject_faults or None)
     if args.out:
         path = write_artifact(args.out, doc)
         print(f"\n# artifact: {path} ({doc['schema_version']}, "

@@ -56,6 +56,63 @@ def validate_common(doc: dict) -> None:
     _check(bool(doc.get("git_sha")) and doc["git_sha"] != "unknown",
            f"git_sha: {doc.get('git_sha')!r}")
     _check(doc.get("seed") is not None, "seed missing")
+    _validate_quarantine(doc)
+
+
+def _quarantined_records(doc: dict) -> list[dict]:
+    """All quarantine records across the artifact's sweeps."""
+    return [q for s in doc.get("sweeps") or ()
+            for q in s.get("quarantined") or ()]
+
+
+def _validate_quarantine(doc: dict) -> None:
+    """Structural checks on the resilience layer's quarantine records.
+
+    Every sweep's completed + quarantined cell counts must add back up to
+    the grid size (no cell silently dropped), and each record must be
+    self-describing enough to re-run the stranded cell by hand.
+    """
+    for s in doc.get("sweeps") or ():
+        stats = s.get("stats") or {}
+        if "quarantined_cells" in stats:
+            _check(len(s.get("cells") or ()) + stats["quarantined_cells"]
+                   == stats.get("n_cells"),
+                   f"sweep {s.get('grid', {}).get('name')!r}: cells "
+                   f"({len(s.get('cells') or ())}) + quarantined "
+                   f"({stats['quarantined_cells']}) != n_cells "
+                   f"({stats.get('n_cells')})")
+        for q in s.get("quarantined") or ():
+            _check(bool(q.get("error")) and q.get("policy")
+                   and (q.get("workload") or q.get("mix"))
+                   and q.get("attempts", 0) >= 1,
+                   f"malformed quarantine record: {q}")
+
+
+def expect_quarantine(doc: dict) -> str:
+    """Fault-drill mode: the run was EXPECTED to strand cells (CI injects a
+    persistent fault and asserts the pipeline quarantined instead of died)."""
+    qs = _quarantined_records(doc)
+    _check(bool(qs), "expected quarantined cells, found none — the "
+                     "fault-injection drill did not exercise quarantine")
+    for s in doc.get("sweeps") or ():
+        n_bad = (s.get("stats") or {}).get("quarantined_cells", 0)
+        n_cells = (s.get("stats") or {}).get("n_cells", 0)
+        _check(n_bad < n_cells or n_cells == 0,
+               f"sweep {s.get('grid', {}).get('name')!r} quarantined every "
+               f"cell ({n_bad}/{n_cells}) — bisection stranded nothing")
+    return f"{len(qs)} quarantined cell(s), bisection stranded < grid"
+
+
+def expect_resume(doc: dict) -> str:
+    """Journal-resume mode: a prior process filled the cache journal, so this
+    run must have replayed completed cells from disk (hits > 0)."""
+    cs = doc.get("cache_stats") or {}
+    _check(cs.get("journal") is not None,
+           f"no journal recorded in cache_stats: {cs}")
+    _check(cs.get("loaded", 0) > 0 and cs.get("hits", 0) > 0,
+           f"expected journal-replayed cells (loaded>0, hits>0): {cs}")
+    return (f"resumed from {cs['journal']}: loaded={cs['loaded']} "
+            f"hits={cs['hits']} misses={cs.get('misses')}")
 
 
 def _validate_commands_record(suite: str, summary: dict) -> None:
@@ -81,8 +138,18 @@ def validate_smoke(doc: dict) -> str:
     _check(smoke.get("sched_ok") is True, f"sched_ok: {smoke}")
     _check(any(s.get("kind") == "mix_sweep" for s in doc["sweeps"]),
            "no mix_sweep among sweeps")
+    if "quarantined" in smoke:   # older artifacts predate the resilience layer
+        _check(smoke["quarantined"] == len(_quarantined_records(doc)),
+               f"summary quarantined={smoke['quarantined']} != "
+               f"{len(_quarantined_records(doc))} records in sweeps")
+        _check(smoke["quarantined"] == 0 or doc.get("fault_injection")
+               or smoke.get("fault_injection"),
+               f"organic (non-injected) quarantine in smoke run: "
+               f"{_quarantined_records(doc)}")
     _validate_commands_record("smoke", smoke)
-    return f"smoke ok: {doc['git_sha']} {doc.get('cache_stats')}"
+    return (f"smoke ok: {doc['git_sha']} {doc.get('cache_stats')}"
+            + (f", {smoke['quarantined']} quarantined (fault drill)"
+               if smoke.get("quarantined") else ""))
 
 
 def validate_mapping(doc: dict) -> str:
@@ -284,6 +351,12 @@ def main(argv: list[str] | None = None) -> int:
                     help="re-parse a command-trace dump, re-run the JEDEC "
                          "checker, and pin its sha against the artifact's "
                          "commands record")
+    ap.add_argument("--expect-quarantine", action="store_true",
+                    help="fault-drill mode: fail unless the artifact records "
+                         "quarantined cells (and not a fully-dead sweep)")
+    ap.add_argument("--expect-resume", action="store_true",
+                    help="journal mode: fail unless this run replayed "
+                         "completed cells from a persistent cache journal")
     args = ap.parse_args(argv)
 
     try:
@@ -309,6 +382,10 @@ def main(argv: list[str] | None = None) -> int:
         if args.check_commands:
             msg += "; commands: " + check_commands_file(
                 args.check_commands, doc, suite)
+        if args.expect_quarantine:
+            msg += "; quarantine: " + expect_quarantine(doc)
+        if args.expect_resume:
+            msg += "; resume: " + expect_resume(doc)
     except ValidationError as e:
         print(f"INVALID {args.artifact} [{suite}]: {e}", file=sys.stderr)
         return 1

@@ -172,12 +172,23 @@ class Trace:
         written by :meth:`dump` restore ``mlp_window`` (an explicit argument
         wins; the fallback is the default core's MSHR count). The text format
         has no dependence column: ``dep`` is all-False.
+
+        A malformed line raises ``ValueError`` naming the source file, the
+        line number, and the offending text — a 2M-line ramulator dump with
+        one bad row must point at that row, not at a numpy shape error three
+        layers later.
         """
         if hasattr(path, "read"):
+            src = getattr(path, "name", None) or "<stream>"
             lines = list(path)
         else:
+            src = os.fspath(path)
             with open(path) as f:
                 lines = list(f)
+
+        def bad(lineno: int, raw: str, msg: str) -> ValueError:
+            return ValueError(
+                f"{src}: line {lineno}: {msg}: offending text {raw.strip()!r}")
 
         header_mlp = None
         cycles, addrs, writes = [], [], []
@@ -197,21 +208,21 @@ class Trace:
                 try:
                     cyc = int(toks[0])
                 except ValueError:
-                    raise ValueError(f"line {lineno}: bad cycle token "
-                                     f"{toks[0]!r}") from None
+                    raise bad(lineno, raw,
+                              f"bad cycle token {toks[0]!r}") from None
                 a, rw = toks[1], toks[2]
             else:
-                raise ValueError(f"line {lineno}: expected 'cycle addr R|W' "
-                                 f"or 'addr R|W', got {line!r}")
+                raise bad(lineno, raw,
+                          "expected 'cycle addr R|W' or 'addr R|W'")
             rw = rw.upper()
             if rw in _WRITE_TOKENS:
                 writes.append(True)
             elif rw in _READ_TOKENS:
                 writes.append(False)
             else:
-                raise ValueError(f"line {lineno}: unknown request type "
-                                 f"{rw!r} (expected one of "
-                                 f"{sorted(_READ_TOKENS | _WRITE_TOKENS)})")
+                raise bad(lineno, raw,
+                          f"unknown request type {rw!r} (expected one of "
+                          f"{sorted(_READ_TOKENS | _WRITE_TOKENS)})")
             cycles.append(cyc)
             try:
                 # base 0 for 0x-hex; plain base 10 rescues zero-padded
@@ -220,10 +231,10 @@ class Trace:
                              or a.lower().startswith(("0x", "0b", "0o"))
                              else int(a, 10))
             except ValueError:
-                raise ValueError(f"line {lineno}: bad address token {a!r} "
-                                 f"(expected decimal or 0x-hex)") from None
+                raise bad(lineno, raw, f"bad address token {a!r} "
+                          f"(expected decimal or 0x-hex)") from None
         if not addrs:
-            raise ValueError("trace file contains no requests")
+            raise ValueError(f"trace file {src} contains no requests")
 
         addr = np.asarray(addrs, np.uint64)
         if all(c is None for c in cycles):
@@ -231,18 +242,18 @@ class Trace:
         elif any(c is None for c in cycles):
             # a mixed file means a malformed line, not an addr-only trace;
             # silently zeroing every gap would change simulated timing
-            bad = cycles.index(None) + 1
-            raise ValueError(f"trace mixes 'cycle addr R|W' and 'addr R|W' "
-                             f"lines (first cycle-less request is #{bad}); "
-                             f"use one form throughout")
+            i = cycles.index(None) + 1
+            raise ValueError(f"{src}: trace mixes 'cycle addr R|W' and "
+                             f"'addr R|W' lines (first cycle-less request "
+                             f"is #{i}); use one form throughout")
         else:
             cyc_arr = np.asarray(cycles, np.int64)
             gap = np.maximum(np.diff(cyc_arr, prepend=cyc_arr[:1]), 0)
             if gap.max() >= 2 ** 31:
                 i = int(gap.argmax())
                 raise ValueError(
-                    f"cycle gap of {int(gap[i])} before request #{i + 1} "
-                    f"overflows the simulator's int32 gap field")
+                    f"{src}: cycle gap of {int(gap[i])} before request "
+                    f"#{i + 1} overflows the simulator's int32 gap field")
 
         m = mapping_for(mapping, n_banks, n_subarrays, rows_per_bank)
         bank, subarray, row = m.decode(addr)

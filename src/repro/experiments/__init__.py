@@ -18,7 +18,11 @@ shape bucketing and a content-hashed result cache:
 See ``docs/experiments.md`` for the grid API and artifact schema reference.
 """
 from repro.experiments.grid import Cell, MixCell, MixGrid, SweepGrid
-from repro.experiments.cache import ResultCache, GLOBAL_CACHE, cell_key
+from repro.experiments.cache import (ResultCache, PersistentResultCache,
+                                     GLOBAL_CACHE, cell_key,
+                                     install_global_cache)
+from repro.experiments.resilience import (Fault, FaultPlan, ResiliencePolicy,
+                                          SimulatedOOM, SweepKilled)
 from repro.experiments.runner import (CellResult, MixCellResult,
                                       MixSweepResult, SweepResult,
                                       run_mix_sweep, run_sweep,
@@ -28,7 +32,9 @@ from repro.experiments.artifact import (SWEEP_SCHEMA, BENCH_SCHEMA,
 
 __all__ = [
     "Cell", "MixCell", "MixGrid", "SweepGrid",
-    "ResultCache", "GLOBAL_CACHE", "cell_key",
+    "ResultCache", "PersistentResultCache", "GLOBAL_CACHE", "cell_key",
+    "install_global_cache",
+    "Fault", "FaultPlan", "ResiliencePolicy", "SimulatedOOM", "SweepKilled",
     "CellResult", "MixCellResult", "MixSweepResult", "SweepResult",
     "run_mix_sweep", "run_sweep", "trace_for", "clear_trace_cache",
     "SWEEP_SCHEMA", "BENCH_SCHEMA", "bench_artifact", "write_artifact",

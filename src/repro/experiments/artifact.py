@@ -40,15 +40,23 @@ def git_sha(cwd: str | None = None) -> str:
             ["git", "status", "--porcelain"], cwd=cwd, capture_output=True,
             text=True, timeout=5, check=True).stdout.strip()
         return sha + ("-dirty" if dirty else "")
-    except Exception:
+    except (OSError, subprocess.SubprocessError):
+        # expected when git is absent, the dir is not a checkout, or the
+        # probe times out — anything else is a real bug and must surface
         return "unknown"
 
 
 def bench_artifact(results: dict[str, Any], sweeps: list[dict[str, Any]],
                    argv: list[str] | None = None,
                    cache_stats: dict[str, Any] | None = None,
-                   seed: int | None = None) -> dict[str, Any]:
-    """Assemble the single top-level document ``benchmarks.run`` emits."""
+                   seed: int | None = None,
+                   fault_injection: str | None = None) -> dict[str, Any]:
+    """Assemble the single top-level document ``benchmarks.run`` emits.
+
+    ``fault_injection`` records the ``--inject-faults`` spec (when one was
+    active) so a quarantine-bearing artifact is self-describing: validators
+    and humans can tell deliberate fault drills from organic failures.
+    """
     return {
         "schema_version": BENCH_SCHEMA,
         "created_unix": time.time(),
@@ -58,16 +66,25 @@ def bench_artifact(results: dict[str, Any], sweeps: list[dict[str, Any]],
         "results": results,
         "sweeps": sweeps,
         "cache_stats": cache_stats or {},
+        "fault_injection": fault_injection,
     }
 
 
 def write_artifact(path: str, doc: dict[str, Any]) -> str:
-    """Write an artifact document as JSON, creating parent dirs. Returns path."""
+    """Write an artifact document as JSON, creating parent dirs. Returns path.
+
+    Crash-consistent: the document is written to a temp file and atomically
+    renamed into place, so a killed run leaves either the previous artifact
+    or the new one — never a truncated JSON that downstream validation would
+    choke on.
+    """
     d = os.path.dirname(path)
     if d:
         os.makedirs(d, exist_ok=True)
-    with open(path, "w") as f:
+    tmp = f"{path}.tmp.{os.getpid()}"
+    with open(tmp, "w") as f:
         json.dump(doc, f, indent=1, sort_keys=False, default=_default)
+    os.replace(tmp, path)
     return path
 
 

@@ -10,11 +10,18 @@ The practical effect inside one process: the baseline is simulated exactly
 once per (workload, geometry) cell no matter how many mechanism policies are
 compared against it, and sweeps that share cells (fig4's 32x5 grid and fig5's
 32x2 grid, say) share their results.
+
+:class:`PersistentResultCache` extends the same store with a crash-consistent
+on-disk journal, so completed cells survive the *process*: a killed or OOM'd
+sweep re-run from the journal replays every finished cell from disk and only
+executes the remainder (see docs/experiments.md, "Resilience").
 """
 from __future__ import annotations
 
 import dataclasses
 import hashlib
+import json
+import os
 from typing import Any
 
 import numpy as np
@@ -38,7 +45,13 @@ def cell_key(trace: Trace, policy: Policy, config: SimConfig) -> str:
 
 
 class ResultCache:
-    """In-memory {cell_key: counters-dict} store with hit/miss accounting."""
+    """In-memory {cell_key: counters-dict} store with hit/miss accounting.
+
+    ``get``/``put`` exchange *defensive copies*: a caller mutating the dict it
+    passed in or got back can never corrupt the cached counters (which other
+    sweeps — and, in the persistent subclass, the on-disk journal — trust
+    bit-for-bit).
+    """
 
     def __init__(self) -> None:
         self._store: dict[str, dict[str, int]] = {}
@@ -55,18 +68,113 @@ class ResultCache:
         out = self._store.get(key)
         if out is None:
             self.misses += 1
-        else:
-            self.hits += 1
-        return out
+            return None
+        self.hits += 1
+        return dict(out)
 
     def put(self, key: str, counters: dict[str, int]) -> None:
-        self._store[key] = counters
+        self._store[key] = dict(counters)
+
+    def flush(self) -> None:
+        """Durability hook: the runner calls this after committing each
+        bucket. A no-op for the in-memory store."""
 
     def stats(self) -> dict[str, Any]:
         return {"entries": len(self._store), "hits": self.hits,
                 "misses": self.misses}
 
 
+class PersistentResultCache(ResultCache):
+    """Result cache backed by an append-only JSON-lines journal on disk.
+
+    One line per cell — ``{"key": <cell_key>, "counters": {...}}`` — loaded
+    at construction, so re-running any sweep (across processes and PRs)
+    replays completed cells from the journal and only executes the remainder.
+
+    Crash consistency: ``flush()`` (called by the runner after every
+    committed bucket) writes the *full* journal to ``<path>.tmp.<pid>`` and
+    atomically renames it over ``path``. A reader therefore always sees a
+    complete, previously-valid journal — never a half-written bucket. The
+    loader nevertheless tolerates a torn or malformed trailing line (e.g. a
+    journal appended by a foreign writer that died mid-line): bad lines are
+    counted in ``dropped`` and skipped, never fatal — losing one cached cell
+    costs one re-simulation, while refusing the whole journal would cost the
+    entire sweep.
+    """
+
+    def __init__(self, path: str | os.PathLike) -> None:
+        super().__init__()
+        self.path = os.fspath(path)
+        self.loaded = 0     # journal entries restored at construction
+        self.dropped = 0    # malformed/torn lines skipped at construction
+        self._dirty = False
+        self._load()
+
+    def _load(self) -> None:
+        try:
+            with open(self.path) as f:
+                lines = f.readlines()
+        except FileNotFoundError:
+            return
+        for line in lines:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                rec = json.loads(line)
+                key = rec["key"]
+                counters = {str(k): int(v) for k, v in rec["counters"].items()}
+                if not isinstance(key, str) or not counters:
+                    raise ValueError(line)
+            except (json.JSONDecodeError, KeyError, TypeError,
+                    ValueError, AttributeError):
+                self.dropped += 1
+                continue
+            self._store[key] = counters
+            self.loaded += 1
+
+    def put(self, key: str, counters: dict[str, int]) -> None:
+        if self._store.get(key) != counters:
+            self._dirty = True
+        super().put(key, counters)
+
+    def flush(self) -> None:
+        """Persist the store: write-to-temp + atomic rename (per bucket)."""
+        if not self._dirty:
+            return
+        d = os.path.dirname(self.path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        tmp = f"{self.path}.tmp.{os.getpid()}"
+        with open(tmp, "w") as f:
+            for key, counters in self._store.items():
+                f.write(json.dumps({"key": key, "counters": counters},
+                                   sort_keys=True) + "\n")
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, self.path)
+        self._dirty = False
+
+    def stats(self) -> dict[str, Any]:
+        return {**super().stats(), "journal": self.path,
+                "loaded": self.loaded, "dropped": self.dropped}
+
+
 #: Process-wide default cache: benchmarks run back-to-back by
 #: ``benchmarks.run`` share baselines through this instance.
 GLOBAL_CACHE = ResultCache()
+
+
+def install_global_cache(cache: ResultCache) -> ResultCache:
+    """Swap the process-wide cache (e.g. for a journal-backed
+    :class:`PersistentResultCache`); returns the previous instance.
+
+    Rebinds both this module's ``GLOBAL_CACHE`` and the ``repro.experiments``
+    package alias, so call sites using either import path agree.
+    """
+    global GLOBAL_CACHE
+    prev = GLOBAL_CACHE
+    GLOBAL_CACHE = cache
+    import repro.experiments as pkg
+    pkg.GLOBAL_CACHE = cache
+    return prev

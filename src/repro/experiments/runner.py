@@ -20,6 +20,16 @@ via three mechanisms:
 ``run_mix_sweep`` executes the multi-core analogue (:class:`MixGrid`, the
 paper's policy x scheduler x mix surface) with the same bucketing idea over
 :func:`repro.core.dram.multicore.simulate_multicore_batch`.
+
+Both runners execute their buckets through the resilience layer
+(:mod:`repro.experiments.resilience`): a bucket that raises is retried with
+bounded backoff, then bisected so only truly-poisoned cells are stranded in
+the sweep's ``quarantined`` record; per-bucket wall time feeds an EWMA
+straggler watchdog; and a :class:`~repro.experiments.resilience.FaultPlan`
+can inject deterministic failures for tests/CI. Completed buckets are
+committed to the cache — and, for a
+:class:`~repro.experiments.cache.PersistentResultCache`, flushed to its
+journal — immediately, so a crash never loses finished work.
 """
 from __future__ import annotations
 
@@ -39,6 +49,9 @@ from repro.core.dram.trace import (ROW_SPACE_STRIDE, Trace, WorkloadProfile,
                                   generate_trace, stack_traces)
 from repro.experiments.cache import ResultCache, cell_key
 from repro.experiments.grid import Cell, MixCell, MixGrid, SweepGrid, _json_safe
+from repro.experiments.resilience import (FaultPlan, ResiliencePolicy,
+                                          execute_buckets)
+from repro.fault.watchdog import StepWatchdog
 
 _COUNTER_FIELDS = tuple(f.name for f in dataclasses.fields(SimResult))
 
@@ -130,13 +143,20 @@ class CellResult:
 
 
 class SweepResult:
-    """Results of one grid run, with paper-metric accessors."""
+    """Results of one grid run, with paper-metric accessors.
+
+    ``quarantined`` lists the cells (if any) stranded by the resilience
+    layer after retries + bisection — see docs/experiments.md. Quarantined
+    cells are absent from ``cells``; accessors raise when asked for one.
+    """
 
     def __init__(self, grid: SweepGrid, cells: list[CellResult],
-                 stats: dict[str, Any]) -> None:
+                 stats: dict[str, Any],
+                 quarantined: list[dict[str, Any]] | None = None) -> None:
         self.grid = grid
         self.cells = cells
         self.stats = stats
+        self.quarantined = quarantined or []
 
     def select(self, policy: Policy | None = None,
                workload: str | None = None, **config_eq: Any) -> list[CellResult]:
@@ -165,9 +185,13 @@ class SweepResult:
         for w in self.grid.workloads:
             c = by_wl.get(w.name)
             if c is None:
+                hint = (" or quarantined by the resilience layer "
+                        f"({len(self.quarantined)} cells quarantined)"
+                        if self.quarantined else "")
                 raise ValueError(
                     f"no cell for workload {w.name!r} matching policy={policy} "
-                    f"{config_eq} — was it pruned by the grid's where filter?")
+                    f"{config_eq} — was it pruned by the grid's where filter"
+                    f"{hint}?")
             vals.append(c.counters[name] if name in c.counters
                         else c.derived[name])
         return np.asarray(vals, np.float64)
@@ -192,12 +216,24 @@ class SweepResult:
             "grid": self.grid.describe(),
             "stats": self.stats,
             "cells": [c.to_json() for c in self.cells],
+            "quarantined": self.quarantined,
         }
 
 
-def run_sweep(grid: SweepGrid, cache: ResultCache | None = None) -> SweepResult:
-    """Execute a grid: dedupe via cache, bucket by static shape, vmap, unpack."""
+def run_sweep(grid: SweepGrid, cache: ResultCache | None = None, *,
+              resilience: ResiliencePolicy | None = None,
+              fault_plan: FaultPlan | None = None) -> SweepResult:
+    """Execute a grid: dedupe via cache, bucket by static shape, vmap, unpack.
+
+    Buckets run through the resilience layer (retry → bisect → quarantine;
+    see :mod:`repro.experiments.resilience`): a failing bucket strands only
+    its truly-poisoned cells in ``SweepResult.quarantined`` instead of
+    aborting the sweep, and each completed (sub-)bucket is committed to
+    ``cache`` — journal included, for a persistent cache — before the next
+    one runs, so a crash or kill never loses finished cells.
+    """
     cache = cache if cache is not None else ResultCache()
+    resilience = resilience or ResiliencePolicy()
     t0 = time.perf_counter()
     cells = grid.expand()
 
@@ -222,33 +258,54 @@ def run_sweep(grid: SweepGrid, cache: ResultCache | None = None) -> SweepResult:
             pending.setdefault(_bucket_key(c, grid.n_requests), []).append(i)
             seen_pending.add(k)
 
-    # One batched simulator call per static-shape bucket.
-    n_batches = 0
-    for idxs in pending.values():
+    # One batched simulator call per static-shape (sub-)bucket, fault-isolated.
+    def simulate_bucket(idxs: list[int]) -> dict[int, dict[str, int]]:
         stacked = stack_traces([traces[i] for i in idxs])
         res = _SIMULATE(stacked, cells[idxs[0]].policy, cells[idxs[0]].config)
-        n_batches += 1
         unpacked = {f: np.asarray(getattr(res, f)) for f in _COUNTER_FIELDS}
-        for b, i in enumerate(idxs):
-            counters = {f: int(unpacked[f][b]) for f in _COUNTER_FIELDS}
+        return {i: {f: int(unpacked[f][b]) for f in _COUNTER_FIELDS}
+                for b, i in enumerate(idxs)}
+
+    def commit_bucket(out: dict[int, dict[str, int]]) -> None:
+        for i, counters in out.items():
             counters_by_key[keys[i]] = counters
             cache.put(keys[i], counters)
+        cache.flush()   # crash consistency: journal the bucket before moving on
 
+    report = execute_buckets(
+        pending.values(), simulate_bucket, commit_bucket,
+        policy=resilience, fault_plan=fault_plan,
+        watchdog=StepWatchdog(threshold=resilience.straggler_threshold))
+
+    quarantined = [
+        {"index": q.index, "workload": cells[q.index].workload.name,
+         "policy": cells[q.index].policy.name,
+         "overrides": {k: _json_safe(v)
+                       for k, v in cells[q.index].override_dict.items()},
+         "key": keys[q.index], "bucket": q.bucket,
+         "error": q.error, "attempts": q.attempts}
+        for q in report.quarantined
+    ]
     results = [
         CellResult(workload=c.workload, policy=c.policy, config=c.config,
                    overrides=c.override_dict, key=k, cache_hit=k in hit_keys,
                    counters=counters_by_key[k])
-        for c, k in zip(cells, keys)
+        for c, k in zip(cells, keys) if k in counters_by_key
     ]
     stats = {
         "n_cells": len(cells),
         "n_unique": len(set(keys)),
         "cache_hits": len(hit_keys),
-        "simulated_cells": sum(len(v) for v in pending.values()),
-        "sim_batches": n_batches,
+        # pending holds one index per unique key; quarantined ones never
+        # produced counters, so they don't count as simulated
+        "simulated_cells": (sum(len(v) for v in pending.values())
+                            - len(report.quarantined)),
+        "sim_batches": report.n_batches,
+        "quarantined_cells": len(cells) - len(results),
         "elapsed_s": round(time.perf_counter() - t0, 4),
+        **report.stats(),
     }
-    return SweepResult(grid, results, stats)
+    return SweepResult(grid, results, stats, quarantined)
 
 
 # ---------------------------------------------------------------------------
@@ -290,13 +347,19 @@ class MixCellResult:
 
 
 class MixSweepResult:
-    """Results of one mix-grid run, with weighted-speedup accessors."""
+    """Results of one mix-grid run, with weighted-speedup accessors.
+
+    ``quarantined`` mirrors :class:`SweepResult`: mix cells stranded by the
+    resilience layer, absent from ``cells``.
+    """
 
     def __init__(self, grid: MixGrid, cells: list[MixCellResult],
-                 stats: dict[str, Any]) -> None:
+                 stats: dict[str, Any],
+                 quarantined: list[dict[str, Any]] | None = None) -> None:
         self.grid = grid
         self.cells = cells
         self.stats = stats
+        self.quarantined = quarantined or []
 
     def select(self, policy: Policy | None = None, mix: str | None = None,
                **config_eq: Any) -> list[MixCellResult]:
@@ -324,9 +387,12 @@ class MixSweepResult:
         for i in range(len(self.grid.mixes)):
             c = by_mix.get(i)
             if c is None:
+                hint = (" or quarantined by the resilience layer "
+                        f"({len(self.quarantined)} cells quarantined)"
+                        if self.quarantined else "")
                 raise ValueError(
                     f"no cell for mix {i} matching policy={policy} {config_eq}"
-                    f" — was it pruned by the grid's where filter?")
+                    f" — was it pruned by the grid's where filter{hint}?")
             vals.append(c.weighted_speedup)
         return np.asarray(vals, np.float64)
 
@@ -337,10 +403,13 @@ class MixSweepResult:
             "grid": self.grid.describe(),
             "stats": self.stats,
             "cells": [c.to_json() for c in self.cells],
+            "quarantined": self.quarantined,
         }
 
 
-def run_mix_sweep(grid: MixGrid) -> MixSweepResult:
+def run_mix_sweep(grid: MixGrid, *,
+                  resilience: ResiliencePolicy | None = None,
+                  fault_plan: FaultPlan | None = None) -> MixSweepResult:
     """Execute a :class:`MixGrid`: bucket by static shape, vmap over mixes.
 
     Each (policy, config) bucket becomes ONE
@@ -349,12 +418,14 @@ def run_mix_sweep(grid: MixGrid) -> MixSweepResult:
     scheduler-independent run-alone baseline references are computed once per
     geometry/refresh point and shared across every policy x scheduler cell
     (mix results are not content-hash cached — the multicore scan dominates
-    and mix grids are small).
+    and mix grids are small). Buckets run through the same retry → bisect →
+    quarantine isolation as :func:`run_sweep`.
     """
     from repro.core.dram.multicore import (alone_baseline_cycles,
                                            simulate_multicore_batch)
     from repro.core.dram.schedulers import Scheduler
 
+    resilience = resilience or ResiliencePolicy()
     t0 = time.perf_counter()
     cells = grid.expand()
 
@@ -379,8 +450,7 @@ def run_mix_sweep(grid: MixGrid) -> MixSweepResult:
     for i, c in enumerate(cells):
         buckets.setdefault(_bucket_key(c, grid.n_requests), []).append(i)
 
-    results: dict[int, MixCellResult] = {}
-    for idxs in buckets.values():
+    def simulate_bucket(idxs: list[int]) -> dict[int, MixCellResult]:
         bucket_cells = [cells[i] for i in idxs]
         traces = [mix_traces(c) for c in bucket_cells]
         alone = np.concatenate([alone_for(c, tr)
@@ -388,19 +458,40 @@ def run_mix_sweep(grid: MixGrid) -> MixSweepResult:
         mc = simulate_multicore_batch(traces, bucket_cells[0].policy,
                                       bucket_cells[0].config,
                                       alone_cycles=alone)
+        out: dict[int, MixCellResult] = {}
         for i, res in zip(idxs, mc):
             counters = {f.name: int(np.asarray(getattr(res.shared, f.name)))
                         for f in dataclasses.fields(SimResult)}
-            results[i] = MixCellResult(
+            out[i] = MixCellResult(
                 cell=cells[i], counters=counters,
                 weighted_speedup=res.weighted_speedup,
                 core_cycles=[int(x) for x in res.core_cycles],
                 alone_cycles=[float(x) for x in res.alone_cycles])
+        return out
 
+    results: dict[int, MixCellResult] = {}
+    report = execute_buckets(
+        buckets.values(), simulate_bucket, results.update,
+        policy=resilience, fault_plan=fault_plan,
+        watchdog=StepWatchdog(threshold=resilience.straggler_threshold))
+
+    quarantined = [
+        {"index": q.index, "mix": cells[q.index].mix_name,
+         "policy": cells[q.index].policy.name,
+         "overrides": {k: _json_safe(v)
+                       for k, v in cells[q.index].override_dict.items()},
+         "bucket": q.bucket, "error": q.error, "attempts": q.attempts}
+        for q in report.quarantined
+    ]
     stats = {
         "n_cells": len(cells),
         "n_cores": grid.n_cores,
-        "sim_batches": len(buckets),
+        "sim_batches": report.n_batches,
+        "quarantined_cells": len(cells) - len(results),
         "elapsed_s": round(time.perf_counter() - t0, 4),
+        **report.stats(),
     }
-    return MixSweepResult(grid, [results[i] for i in range(len(cells))], stats)
+    return MixSweepResult(grid,
+                          [results[i] for i in range(len(cells))
+                           if i in results],
+                          stats, quarantined)

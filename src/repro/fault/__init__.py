@@ -1,3 +1,3 @@
-from repro.fault.watchdog import StepWatchdog, SupervisedRun
+from repro.fault.watchdog import StepWatchdog, StragglerEvent, SupervisedRun
 
-__all__ = ["StepWatchdog", "SupervisedRun"]
+__all__ = ["StepWatchdog", "StragglerEvent", "SupervisedRun"]

@@ -1,9 +1,13 @@
 """Fault tolerance: straggler detection + supervised restart policy.
 
-``StepWatchdog`` tracks per-step wall time with an EWMA; a step slower than
+``StepWatchdog`` tracks per-unit wall time with an EWMA; a unit slower than
 ``threshold x`` the EWMA is flagged as a straggler event (on real clusters:
 trigger checkpoint-and-rebalance / hot-spare swap; here: recorded + surfaced).
-It also watches data-pipeline heartbeats to detect a wedged input thread.
+The "unit" is whatever the caller feeds it — originally train steps, now also
+the sweep runner's simulation buckets
+(:func:`repro.experiments.resilience.execute_buckets` surfaces straggler
+events in every ``repro.sweep/v1`` artifact's stats). It also watches
+data-pipeline heartbeats to detect a wedged input thread.
 
 ``SupervisedRun`` wraps the train loop in a bounded-restart supervision policy:
 on an exception the loop resumes from the latest checkpoint (the data pipeline
@@ -43,6 +47,14 @@ class StepWatchdog:
         self.ewma = (step_time if self.ewma is None
                      else (1 - self.alpha) * self.ewma + self.alpha * step_time)
         return straggler
+
+    def summary(self) -> dict:
+        """Artifact-friendly digest (embedded in sweep stats by the runner)."""
+        return {
+            "ewma_s": None if self.ewma is None else round(self.ewma, 6),
+            "n_stragglers": len(self.events),
+            "threshold": self.threshold,
+        }
 
     def observe_heartbeat(self, count: int) -> bool:
         """Feed the data-pipeline heartbeat counter; True if wedged."""

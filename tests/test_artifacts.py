@@ -339,3 +339,55 @@ def test_local_command_trace_validates(suite):
     art = LOCAL_ARTIFACTS[suite]
     doc = json.load(open(art)) if art.exists() else None
     assert "legal" in V.check_commands_file(str(trace), doc, suite)
+
+
+def _quarantined_smoke_doc():
+    """A smoke doc whose first sweep stranded one of two cells (fault drill)."""
+    doc = copy.deepcopy(make_doc("smoke"))
+    doc["fault_injection"] = "raise@c1:p"
+    doc["sweeps"][0].update({
+        "grid": {"name": "t"},
+        "stats": {"n_cells": 2, "quarantined_cells": 1},
+        "cells": [{"workload": "lbm", "policy": "BASELINE"}],
+        "quarantined": [{"index": 1, "workload": "mcf", "policy": "BASELINE",
+                         "bucket": 0, "error": "RuntimeError: injected fault",
+                         "attempts": 3}],
+    })
+    return doc
+
+
+def test_quarantine_bookkeeping_must_add_up():
+    doc = _quarantined_smoke_doc()
+    V.SUITES["smoke"](doc)  # consistent counts pass
+    broken = copy.deepcopy(doc)
+    broken["sweeps"][0]["stats"]["n_cells"] = 3  # a cell silently vanished
+    with pytest.raises(V.ValidationError, match="n_cells"):
+        V.SUITES["smoke"](broken)
+    broken = copy.deepcopy(doc)
+    del broken["sweeps"][0]["quarantined"][0]["error"]
+    with pytest.raises(V.ValidationError, match="record"):
+        V.SUITES["smoke"](broken)
+
+
+def test_expect_quarantine_mode():
+    with pytest.raises(V.ValidationError, match="found none"):
+        V.expect_quarantine(make_doc("smoke"))
+    doc = _quarantined_smoke_doc()
+    assert "quarantined" in V.expect_quarantine(doc)
+    dead = copy.deepcopy(doc)
+    dead["sweeps"][0]["stats"] = {"n_cells": 1, "quarantined_cells": 1}
+    dead["sweeps"][0]["cells"] = []
+    with pytest.raises(V.ValidationError, match="every"):
+        V.expect_quarantine(dead)
+
+
+def test_expect_resume_mode():
+    doc = copy.deepcopy(make_doc("smoke"))
+    with pytest.raises(V.ValidationError, match="journal"):
+        V.expect_resume(doc)
+    doc["cache_stats"] = {"journal": "j.jsonl", "loaded": 4, "hits": 4,
+                          "misses": 0}
+    assert "resumed" in V.expect_resume(doc)
+    doc["cache_stats"]["hits"] = 0  # journal present but nothing replayed
+    with pytest.raises(V.ValidationError, match="replayed"):
+        V.expect_resume(doc)

@@ -1,0 +1,393 @@
+"""Resilience layer: fault plans, retry/bisect/quarantine isolation, the
+straggler watchdog, and the crash-consistent persistent result cache.
+
+Two layers, mirroring the module split:
+
+* ``execute_buckets`` against a fake simulator — every failure path (retry
+  recovery, bisection stranding, whole-bucket quarantine, kill propagation,
+  straggler detection) runs in microseconds with no JAX involved;
+* integration through ``run_sweep`` / ``run_mix_sweep`` on tiny real grids —
+  quarantine records, artifact JSON, stats bookkeeping, and the
+  kill-at-every-bucket-boundary crash-resume guarantee (resumed runs replay
+  journaled cells bit-identically and re-execute nothing).
+"""
+import dataclasses
+import json
+import time
+
+import pytest
+
+from repro.core.dram import PAPER_WORKLOADS, Policy, workload
+from repro.experiments import (Fault, FaultPlan, MixGrid, PersistentResultCache,
+                               ResiliencePolicy, ResultCache, SimulatedOOM,
+                               SweepGrid, SweepKilled, install_global_cache,
+                               run_mix_sweep, run_sweep)
+from repro.experiments import runner as runner_mod
+from repro.experiments.resilience import execute_buckets
+
+WLS = tuple(p for p in PAPER_WORKLOADS if p.name in ("mcf", "lbm"))
+N = 128
+
+#: Retries without wall-clock cost: zero backoff, no-op sleep.
+FAST = ResiliencePolicy(backoff_base_s=0.0, sleep=lambda s: None)
+
+
+def tiny_grid(**kw):
+    defaults = dict(name="t", workloads=WLS,
+                    policies=(Policy.BASELINE, Policy.SALP1),
+                    n_requests=N, config_axes={"n_subarrays": (4, 8)})
+    defaults.update(kw)
+    return SweepGrid(**defaults)
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan spec grammar
+# ---------------------------------------------------------------------------
+
+class TestFaultPlanParse:
+    def test_full_grammar(self):
+        plan = FaultPlan.parse(
+            "oom@b0:x2, raise@c4:p, delay@b1:0.05, corrupt@c2, kill@b3")
+        kinds = [(f.kind, f.bucket, f.cell, f.times) for f in plan.faults]
+        assert kinds == [("oom", 0, None, 2), ("raise", None, 4, None),
+                         ("delay", 1, None, 1), ("corrupt", None, 2, 1),
+                         ("kill", 3, None, 1)]
+        assert plan.faults[2].delay_s == pytest.approx(0.05)
+
+    @pytest.mark.parametrize("spec", [
+        "", "explode@b0", "raise", "raise@z1", "raise@b", "raise@b0:q",
+        "raise@c-1",
+    ])
+    def test_bad_specs_raise(self, spec):
+        with pytest.raises(ValueError):
+            FaultPlan.parse(spec)
+
+    def test_times_bounds_firing(self):
+        plan = FaultPlan.parse("raise@b0:x2")
+        for _ in range(2):
+            with pytest.raises(RuntimeError, match="injected fault"):
+                plan.before(0, [0])
+        plan.before(0, [0])  # exhausted: third call is a no-op
+        assert plan.summary() == {"n_faults": 1, "fired": 2}
+
+    def test_fault_needs_target(self):
+        with pytest.raises(ValueError, match="bucket and/or cell"):
+            Fault(kind="raise")
+
+    def test_corrupt_flips_counters_negative(self):
+        plan = FaultPlan.parse("corrupt@c1")
+        out = plan.after(0, [0, 1], {0: {"a": 5}, 1: {"a": 5, "b": 0}})
+        assert out[0] == {"a": 5}                 # untargeted cell untouched
+        assert out[1] == {"a": -6, "b": -1}       # impossible counters
+
+    def test_corrupt_handles_object_results(self):
+        class R:
+            def __init__(self):
+                self.counters = {"a": 3}
+        plan = FaultPlan.parse("corrupt@b0")
+        out = plan.after(0, [7], {7: R()})
+        assert out[7].counters == {"a": -4}
+
+
+# ---------------------------------------------------------------------------
+# execute_buckets against a fake simulator (no JAX)
+# ---------------------------------------------------------------------------
+
+def fake_sim(idxs):
+    return {i: {"v": i * 10 + 1} for i in idxs}
+
+
+def run_fake(buckets, plan=None, policy=FAST):
+    got = {}
+    report = execute_buckets(buckets, fake_sim, got.update,
+                             policy=policy, fault_plan=plan)
+    return got, report
+
+
+class TestExecuteBuckets:
+    def test_clean_run_commits_everything(self):
+        got, report = run_fake([[0, 1], [2, 3]])
+        assert got == fake_sim([0, 1, 2, 3])
+        assert (report.n_batches, report.retries, report.bisections) == (2, 0, 0)
+        assert not report.quarantined
+
+    def test_transient_fault_recovered_by_retry_bit_identical(self):
+        clean, _ = run_fake([[0, 1], [2, 3]])
+        got, report = run_fake([[0, 1], [2, 3]],
+                               plan=FaultPlan.parse("oom@b0:x1"))
+        assert got == clean
+        assert report.retries == 1 and not report.quarantined
+
+    def test_persistent_cell_fault_bisected_to_single_cell(self):
+        got, report = run_fake([[0, 1, 2, 3]],
+                               plan=FaultPlan.parse("raise@c2:p"))
+        assert sorted(got) == [0, 1, 3]
+        assert [q.index for q in report.quarantined] == [2]
+        q = report.quarantined[0]
+        assert q.bucket == 0 and q.attempts == FAST.max_retries + 1
+        assert q.error.startswith("RuntimeError: injected fault")
+        assert report.bisections == 2 and report.retries > 0
+
+    def test_persistent_bucket_fault_quarantines_whole_bucket(self):
+        # a bucket-targeted fault is inherited by its bisected halves, so
+        # the entire bucket is stranded — but other buckets still complete
+        got, report = run_fake([[0, 1], [2, 3]],
+                               plan=FaultPlan.parse("oom@b0:p"))
+        assert sorted(got) == [2, 3]
+        assert sorted(q.index for q in report.quarantined) == [0, 1]
+        assert all("SimulatedOOM" in q.error for q in report.quarantined)
+
+    def test_bisect_disabled_is_all_or_nothing(self):
+        got, report = run_fake(
+            [[0, 1, 2, 3]], plan=FaultPlan.parse("raise@c2:p"),
+            policy=dataclasses.replace(FAST, bisect=False))
+        assert got == {}
+        assert sorted(q.index for q in report.quarantined) == [0, 1, 2, 3]
+        assert report.bisections == 0
+
+    def test_kill_propagates_and_keeps_committed_buckets(self):
+        got = {}
+        with pytest.raises(SweepKilled):
+            execute_buckets([[0], [1], [2]], fake_sim, got.update,
+                            policy=FAST, fault_plan=FaultPlan.parse("kill@b1"))
+        assert got == fake_sim([0])   # bucket 0 committed before the kill
+
+    def test_oom_is_a_memory_error(self):
+        assert issubclass(SimulatedOOM, MemoryError)
+
+    def test_delay_fault_flags_straggler(self):
+        plan = FaultPlan.parse("delay@b3:0.05")
+        got, report = run_fake([[0], [1], [2], [3]], plan=plan)
+        assert got == fake_sim([0, 1, 2, 3])   # delay never corrupts results
+        assert [s["bucket"] for s in report.stragglers] == [3]
+        assert plan.log[-1]["kind"] == "delay"
+        stats = report.stats()
+        assert stats["watchdog"]["stragglers"] == report.stragglers
+        assert stats["watchdog"]["ewma_s"] > 0
+
+    def test_slow_simulator_flags_straggler_without_faults(self):
+        def sim(idxs):
+            if idxs == [3]:
+                time.sleep(0.05)
+            return fake_sim(idxs)
+        got = {}
+        report = execute_buckets([[0], [1], [2], [3]], sim, got.update,
+                                 policy=FAST)
+        assert [s["bucket"] for s in report.stragglers] == [3]
+
+
+# ---------------------------------------------------------------------------
+# run_sweep / run_mix_sweep integration (real engine, tiny grids)
+# ---------------------------------------------------------------------------
+
+class TestSweepQuarantine:
+    def test_cell_fault_strands_one_cell_with_full_record(self):
+        # cell 2 is (mcf, BASELINE): its bucket [0, 2] must bisect and keep 0
+        sweep = run_sweep(tiny_grid(config_axes={"n_subarrays": (4,)}),
+                          ResultCache(), resilience=FAST,
+                          fault_plan=FaultPlan.parse("raise@c2:p"))
+        assert sweep.stats["n_cells"] == 4 and len(sweep.cells) == 3
+        assert sweep.stats["quarantined_cells"] == 1
+        assert sweep.stats["simulated_cells"] == 3
+        assert sweep.stats["bisections"] >= 1
+        (q,) = sweep.quarantined
+        assert q["workload"] == "mcf" and q["policy"] == "BASELINE"
+        assert q["index"] == 2 and q["attempts"] == FAST.max_retries + 1
+        assert "injected fault" in q["error"] and q["key"]
+        json.dumps(sweep.to_json())   # artifact stays serializable
+        assert sweep.to_json()["quarantined"] == sweep.quarantined
+
+    def test_metric_error_names_quarantine(self):
+        sweep = run_sweep(tiny_grid(config_axes={"n_subarrays": (4,)}),
+                          ResultCache(), resilience=FAST,
+                          fault_plan=FaultPlan.parse("raise@c2:p"))
+        with pytest.raises(ValueError, match="quarantined"):
+            sweep.metric("total_cycles", policy=Policy.BASELINE)
+
+    def test_transient_fault_is_invisible_in_results(self):
+        clean = run_sweep(tiny_grid(), ResultCache())
+        faulted = run_sweep(tiny_grid(), ResultCache(), resilience=FAST,
+                            fault_plan=FaultPlan.parse("oom@b0:x1"))
+        assert faulted.stats["retries"] == 1
+        assert not faulted.quarantined
+        for a, b in zip(clean.cells, faulted.cells):
+            assert a.counters == b.counters
+
+    def test_corrupt_fault_poisons_only_its_cell(self):
+        sweep = run_sweep(tiny_grid(config_axes={"n_subarrays": (4,)}),
+                          ResultCache(), resilience=FAST,
+                          fault_plan=FaultPlan.parse("corrupt@c1"))
+        bad = [c for c in sweep.cells
+               if all(v < 0 for v in c.counters.values())]
+        assert len(bad) == 1
+        assert (bad[0].workload.name, bad[0].policy) == ("lbm", Policy.SALP1)
+
+    def test_mix_sweep_quarantine_record(self):
+        grid = MixGrid(name="t_mix",
+                       mixes=[(workload("mcf"), workload("lbm"))],
+                       policies=(Policy.BASELINE, Policy.MASA),
+                       n_requests=64)
+        mix = run_mix_sweep(grid, resilience=FAST,
+                            fault_plan=FaultPlan.parse("raise@c0:p"))
+        assert mix.stats["n_cells"] == 2 and len(mix.cells) == 1
+        assert mix.stats["quarantined_cells"] == 1
+        (q,) = mix.quarantined
+        assert q["mix"] == "mcf+lbm" and q["policy"] == "BASELINE"
+        assert "injected fault" in q["error"]
+        json.dumps(mix.to_json())
+        with pytest.raises(ValueError, match="quarantined"):
+            mix.weighted_speedups(Policy.BASELINE)
+
+
+class TestCrashResume:
+    def _reference(self):
+        return run_sweep(tiny_grid(), ResultCache())
+
+    def test_kill_at_every_bucket_boundary_resumes_bit_identical(self, tmp_path):
+        ref = self._reference()
+        n_buckets = ref.stats["sim_batches"]          # 2 policies x 2 geoms
+        cells_per_bucket = len(WLS)
+        assert n_buckets == 4
+        for k in range(n_buckets):
+            journal = tmp_path / f"j{k}.jsonl"
+            with pytest.raises(SweepKilled):
+                run_sweep(tiny_grid(), PersistentResultCache(journal),
+                          resilience=FAST,
+                          fault_plan=FaultPlan([Fault(kind="kill", bucket=k)]))
+            # a fresh process: reload the journal, re-run the same grid
+            cache = PersistentResultCache(journal)
+            assert cache.loaded == k * cells_per_bucket
+            calls = []
+            orig = runner_mod._SIMULATE
+
+            def counting(stacked, policy, config):
+                calls.append(stacked["bank"].shape)
+                return orig(stacked, policy, config)
+
+            runner_mod._SIMULATE = counting
+            try:
+                resumed = run_sweep(tiny_grid(), cache)
+            finally:
+                runner_mod._SIMULATE = orig
+            # zero re-execution: only the unjournaled buckets simulate
+            assert len(calls) == n_buckets - k
+            assert resumed.stats["cache_hits"] == k * cells_per_bucket
+            assert resumed.stats["simulated_cells"] == (
+                ref.stats["n_cells"] - k * cells_per_bucket)
+            # and the merged results are bit-identical to the clean run
+            assert len(resumed.cells) == len(ref.cells)
+            for a, b in zip(ref.cells, resumed.cells):
+                assert a.key == b.key and a.counters == b.counters
+
+    def test_kill_then_resume_through_faulted_run(self, tmp_path):
+        # kill mid-run AND quarantine on resume: the two mechanisms compose
+        journal = tmp_path / "j.jsonl"
+        with pytest.raises(SweepKilled):
+            run_sweep(tiny_grid(), PersistentResultCache(journal),
+                      resilience=FAST, fault_plan=FaultPlan.parse("kill@b2"))
+        resumed = run_sweep(tiny_grid(), PersistentResultCache(journal),
+                            resilience=FAST,
+                            fault_plan=FaultPlan.parse("raise@c7:p"))
+        assert resumed.stats["cache_hits"] == 2 * len(WLS)
+        assert resumed.stats["quarantined_cells"] == 1
+        assert len(resumed.cells) == resumed.stats["n_cells"] - 1
+
+
+# ---------------------------------------------------------------------------
+# Persistent result cache (journal) + defensive copies
+# ---------------------------------------------------------------------------
+
+class TestPersistentResultCache:
+    def test_roundtrip(self, tmp_path):
+        p = tmp_path / "cache.jsonl"
+        c1 = PersistentResultCache(p)
+        c1.put("k1", {"a": 1, "b": 2})
+        c1.put("k2", {"a": 3})
+        c1.flush()
+        c2 = PersistentResultCache(p)
+        assert c2.loaded == 2 and c2.dropped == 0
+        assert c2.get("k1") == {"a": 1, "b": 2}
+        assert c2.get("k2") == {"a": 3}
+        assert c2.stats()["journal"] == str(p)
+
+    def test_flush_is_atomic_and_lazy(self, tmp_path):
+        p = tmp_path / "cache.jsonl"
+        c = PersistentResultCache(p)
+        c.flush()                       # nothing dirty: no file appears
+        assert not p.exists()
+        c.put("k", {"a": 1})
+        c.flush()
+        assert p.exists()
+        assert not list(tmp_path.glob("*.tmp.*"))   # temp renamed away
+        before = p.read_text()
+        c.flush()                       # clean again: journal untouched
+        assert p.read_text() == before
+
+    def test_torn_and_malformed_lines_dropped_not_fatal(self, tmp_path):
+        p = tmp_path / "cache.jsonl"
+        c1 = PersistentResultCache(p)
+        c1.put("good", {"a": 1})
+        c1.flush()
+        with open(p, "a") as f:
+            f.write('not json at all\n')
+            f.write('{"key": "no_counters"}\n')
+            f.write('{"key": "torn", "counters": {"a": 1')   # torn mid-line
+        c2 = PersistentResultCache(p)
+        assert c2.loaded == 1 and c2.dropped == 3
+        assert c2.get("good") == {"a": 1}
+
+    def test_install_global_cache_rebinds_both_aliases(self, tmp_path):
+        import repro.experiments as pkg
+        from repro.experiments import cache as cache_mod
+        mine = PersistentResultCache(tmp_path / "j.jsonl")
+        prev = install_global_cache(mine)
+        try:
+            assert pkg.GLOBAL_CACHE is mine
+            assert cache_mod.GLOBAL_CACHE is mine
+        finally:
+            assert install_global_cache(prev) is mine
+        assert pkg.GLOBAL_CACHE is prev and cache_mod.GLOBAL_CACHE is prev
+
+
+@pytest.mark.parametrize("make", [ResultCache,
+                                  lambda: PersistentResultCache("unused.jsonl")])
+def test_cache_exchanges_defensive_copies(make, tmp_path, monkeypatch):
+    # regression: a caller mutating the dict it passed in (or got back) must
+    # never corrupt the cached counters other sweeps trust bit-for-bit
+    monkeypatch.chdir(tmp_path)
+    cache = make()
+    mine = {"a": 1}
+    cache.put("k", mine)
+    mine["a"] = 999
+    assert cache.get("k") == {"a": 1}
+    out = cache.get("k")
+    out["a"] = -5
+    assert cache.get("k") == {"a": 1}
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # collection must degrade to a skip, never hard-error
+    @pytest.mark.skip(reason="hypothesis not installed; journal fuzz skipped")
+    def test_journal_roundtrip_fuzz():
+        pass
+else:
+    _counters = st.dictionaries(st.text(min_size=1, max_size=8),
+                                st.integers(-2 ** 62, 2 ** 62),
+                                min_size=1, max_size=4)
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.dictionaries(st.text("0123456789abcdef", min_size=1, max_size=24),
+                           _counters, max_size=8))
+    def test_journal_roundtrip_fuzz(entries):
+        import tempfile
+        with tempfile.TemporaryDirectory() as td:
+            p = f"{td}/cache.jsonl"
+            c1 = PersistentResultCache(p)
+            for k, v in entries.items():
+                c1.put(k, v)
+            c1.flush()
+            c2 = PersistentResultCache(p)
+            assert c2.loaded == len(entries)
+            for k, v in entries.items():
+                assert c2.get(k) == v   # bit-identical across the journal

@@ -246,3 +246,42 @@ else:
         # the physical stream is mapping-independent
         ref = generate_trace(profile, n, seed=seed, footprint_rows=footprint)
         assert np.array_equal(t.addr, ref.addr)
+
+
+class TestFromFileBadFixtures:
+    """Malformed trace FILES on disk (not just streams): the ValueError must
+    name the source path, the 1-based line number, and the offending text, so
+    a bad row in a multi-million-line ramulator dump is findable by hand."""
+
+    @staticmethod
+    def _write(tmp_path, text):
+        p = tmp_path / "bad.trace"
+        p.write_text(text)
+        return p
+
+    @pytest.mark.parametrize("text,lineno,offending", [
+        ("0 0x0 R\n1 0x40 X\n", 2, "1 0x40 X"),       # unknown request type
+        ("abc 0x0 R\n", 1, "abc 0x0 R"),              # non-numeric cycle
+        ("1 2 3 4\n", 1, "1 2 3 4"),                  # wrong column count
+        ("0 0x0 R\n1 zzz R\n", 2, "1 zzz R"),         # unparseable address
+    ])
+    def test_error_names_file_line_and_text(self, tmp_path, text, lineno,
+                                            offending):
+        p = self._write(tmp_path, text)
+        with pytest.raises(ValueError) as ei:
+            Trace.from_file(p)
+        msg = str(ei.value)
+        assert str(p) in msg
+        assert f"line {lineno}" in msg
+        assert repr(offending) in msg
+
+    def test_empty_file_error_names_file(self, tmp_path):
+        p = self._write(tmp_path, "# only comments\n")
+        with pytest.raises(ValueError, match="no requests"):
+            Trace.from_file(p)
+        with pytest.raises(ValueError, match=str(p)):
+            Trace.from_file(p)
+
+    def test_anonymous_stream_reports_stream_placeholder(self):
+        with pytest.raises(ValueError, match="<stream>"):
+            Trace.from_file(io.StringIO("0 0x0 R\n1 0x40 X\n"))

@@ -27,6 +27,23 @@ FAULT_PLAN = None
 #: Optional ``repro.experiments.ResiliencePolicy`` override for every sweep.
 RESILIENCE = None
 
+#: Optional ``repro.experiments.ShardPlan`` set by ``benchmarks.run
+#: --shards/--mesh``: every sweep partitions its buckets across the plan's
+#: devices and streams per-shard fragments (bit-identical results).
+SHARD_PLAN = None
+
+#: Root directory for streamed ``repro.sweep-fragment/v1`` documents
+#: (``benchmarks.run --fragments``); each sweep writes under
+#: ``<FRAGMENT_DIR>/<grid name>/``. ``None`` = keep fragments in memory only.
+FRAGMENT_DIR = None
+
+
+def _fragment_dir(grid) -> str | None:
+    if FRAGMENT_DIR is None:
+        return None
+    import os
+    return os.path.join(FRAGMENT_DIR, grid.name)
+
 
 def mem_intensive(min_mpki: float = 9.0):
     """The memory-intensive subset (the regime where geometry matters)."""
@@ -45,7 +62,8 @@ def run_grid(grid):
     """
     from repro.experiments import GLOBAL_CACHE, run_sweep
     sweep = run_sweep(grid, GLOBAL_CACHE, resilience=RESILIENCE,
-                      fault_plan=FAULT_PLAN)
+                      fault_plan=FAULT_PLAN, shards=SHARD_PLAN,
+                      fragment_dir=_fragment_dir(grid))
     SWEEPS.append(sweep.to_json())
     return sweep
 
@@ -54,7 +72,8 @@ def run_mix_grid(grid):
     """Run a MixGrid (multi-core policy x scheduler sweep), registering its
     ``repro.sweep/v1`` artifact alongside the single-core sweeps."""
     from repro.experiments import run_mix_sweep
-    sweep = run_mix_sweep(grid, resilience=RESILIENCE, fault_plan=FAULT_PLAN)
+    sweep = run_mix_sweep(grid, resilience=RESILIENCE, fault_plan=FAULT_PLAN,
+                          shards=SHARD_PLAN, fragment_dir=_fragment_dir(grid))
     SWEEPS.append(sweep.to_json())
     return sweep
 

@@ -6,6 +6,8 @@ Usage:
                                             [--out artifacts/bench.json]
                                             [--journal artifacts/cache.jsonl]
                                             [--inject-faults SPEC]
+                                            [--shards N] [--mesh SPEC]
+                                            [--fragments DIR]
                                             [--list]
 
 ``--journal PATH`` (or ``REPRO_CACHE_JOURNAL``) swaps the process-wide result
@@ -15,6 +17,14 @@ across processes/PRs hit warm entries. ``--inject-faults SPEC`` (or
 ``REPRO_FAULT_PLAN``; see ``repro.experiments.FaultPlan.parse`` for the
 grammar) injects deterministic per-bucket faults so CI exercises the
 retry/bisect/quarantine machinery on the real pipeline.
+
+``--shards N`` / ``--mesh SPEC`` (or ``REPRO_SHARDS`` / ``REPRO_MESH``)
+install a ``repro.experiments.ShardPlan``: every sweep partitions its
+buckets' cell axes across the mesh's devices (``--mesh auto`` = all local
+devices; ``cpu:4`` = first 4 CPU devices) with bit-identical results, and
+``--fragments DIR`` (or ``REPRO_FRAGMENTS``) streams each shard's slice of
+the artifact to ``DIR/<grid>/fragment-NNNN.json`` as it completes —
+re-mergeable and re-checkable via ``benchmarks.validate --check-shards``.
 
 Each registry entry is a module exposing ``run() -> dict`` (its summary).
 Benchmarks built on the sweep subsystem share one process-wide result cache,
@@ -111,6 +121,19 @@ def main(argv: list[str] | None = None) -> dict:
                     help="deterministic fault plan, e.g. "
                          "'oom@b0:x1,raise@c4:p' (see "
                          "repro.experiments.FaultPlan.parse)")
+    ap.add_argument("--shards", type=int, metavar="N",
+                    default=int(os.environ.get("REPRO_SHARDS", "0")) or None,
+                    help="partition every sweep bucket into N shards across "
+                         "the device mesh (default: one per mesh device when "
+                         "--mesh is given, else unsharded)")
+    ap.add_argument("--mesh", type=str, metavar="SPEC",
+                    default=os.environ.get("REPRO_MESH", ""),
+                    help="device mesh spec: 'auto' (all local devices), 'N' "
+                         "(first N), or 'platform[:N]' e.g. 'cpu:4'")
+    ap.add_argument("--fragments", type=str, metavar="DIR",
+                    default=os.environ.get("REPRO_FRAGMENTS", ""),
+                    help="stream per-shard repro.sweep-fragment/v1 documents "
+                         "under DIR/<grid>/ ('' = in-memory only)")
     ap.add_argument("--list", action="store_true", help="list registry and exit")
     args = ap.parse_args(argv)
 
@@ -137,6 +160,11 @@ def main(argv: list[str] | None = None) -> dict:
     if args.inject_faults:
         from repro.experiments import FaultPlan
         common.FAULT_PLAN = FaultPlan.parse(args.inject_faults)
+    if args.shards or args.mesh:
+        from repro.experiments import ShardPlan
+        common.SHARD_PLAN = ShardPlan.resolve(args.shards, args.mesh or None)
+    if args.fragments:
+        common.FRAGMENT_DIR = args.fragments
 
     from repro.experiments import GLOBAL_CACHE
 
@@ -171,10 +199,15 @@ def main(argv: list[str] | None = None) -> dict:
         # replayed from a previous process
         run_cache.update({k: v for k, v in GLOBAL_CACHE.stats().items()
                           if k in ("journal", "loaded", "dropped")})
+    sharding = None
+    if common.SHARD_PLAN is not None:
+        sharding = {**common.SHARD_PLAN.describe(),
+                    "fragment_dir": common.FRAGMENT_DIR}
     doc = bench_artifact(results=summaries, sweeps=run_sweeps,
                          argv=list(argv) if argv is not None else sys.argv[1:],
                          cache_stats=run_cache, seed=common.SEED,
-                         fault_injection=args.inject_faults or None)
+                         fault_injection=args.inject_faults or None,
+                         sharding=sharding)
     if args.out:
         path = write_artifact(args.out, doc)
         print(f"\n# artifact: {path} ({doc['schema_version']}, "

@@ -52,35 +52,52 @@ def run() -> dict:
 
     (sweep, us) = timed(run_grid, make_grid())
     assert sweep.stats["n_cells"] == len(SUBSET) * 3 * 2
+    # quarantine bookkeeping FIRST: whatever a fault drill stranded, every
+    # grid cell must be accounted for before any metric is read
+    assert (len(sweep.cells) + sweep.stats["quarantined_cells"]
+            == sweep.stats["n_cells"]), sweep.stats
     faulted = common.FAULT_PLAN is not None
+    n_shards = (sweep.stats.get("sharding") or {}).get("n_shards", 1)
     if not faulted:   # bisection retries legitimately add batches under faults
-        assert sweep.stats["sim_batches"] <= 6, sweep.stats  # 3 pol x 2 geom
+        # 3 pol x 2 geom buckets, each split into at most n_shards pieces
+        assert sweep.stats["sim_batches"] <= 6 * n_shards, sweep.stats
         assert not sweep.quarantined, sweep.quarantined
 
-    # ladder checks over the surviving workloads: a quarantined cell (fault
-    # drill) removes its workload from the comparison, never fakes a pass
-    bad_wls = {q["workload"] for q in sweep.quarantined}
-    survivors = [p.name for p in SUBSET if p.name not in bad_wls]
-    assert survivors, f"fault plan quarantined every smoke workload: {bad_wls}"
+    # ladder checks, quarantine-aware per CELL (not per workload): a pair is
+    # skipped only when one of its cells was quarantined by the fault drill;
+    # a cell missing for any OTHER reason still fails the ladder — a
+    # quarantine can shrink the comparison, never fake a pass
+    bad = {(q["workload"], q["policy"], q["overrides"].get("n_subarrays"))
+           for q in sweep.quarantined}
 
     def cyc(policy, ns, wl):
+        if (wl, policy.name, ns) in bad:
+            return None   # quarantined: legitimately absent
         sel = sweep.select(policy=policy, workload=wl, n_subarrays=ns)
-        return sel[0].counters["total_cycles"] if sel else None
+        assert sel, (f"cell ({wl}, {policy.name}, n_subarrays={ns}) missing "
+                     f"without a quarantine record")
+        return sel[0].counters["total_cycles"]
 
     ok = True
+    compared = 0
     gains = []
-    for wl in survivors:
+    for wl in (p.name for p in SUBSET):
         for ns in (4, 8):
             base, s1 = cyc(Policy.BASELINE, ns, wl), cyc(Policy.SALP1, ns, wl)
-            if base is None or s1 is None or not s1 <= base:
+            if base is None or s1 is None:
+                continue
+            compared += 1
+            if not s1 <= base:
                 ok = False
         b8, m8 = cyc(Policy.BASELINE, 8, wl), cyc(Policy.MASA, 8, wl)
         if b8 is not None and m8 is not None:
             gains.append((b8 / m8 - 1.0) * 100.0)
+    assert compared, (f"fault plan quarantined every ladder pair "
+                      f"({len(sweep.quarantined)} cells) — nothing to check")
     g = sum(gains) / len(gains) if gains else float("nan")
     emit("smoke.grid", per_sim_cell_us(sweep, us),
          f"cells={sweep.stats['n_cells']};batches={sweep.stats['sim_batches']};"
-         f"ladder_ok={ok};masa=+{g:.1f}%;"
+         f"ladder_ok={ok};pairs={compared};masa=+{g:.1f}%;"
          f"quarantined={len(sweep.quarantined)}")
     if not ok:
         raise AssertionError("policy ladder violated in smoke sweep")
@@ -88,6 +105,8 @@ def run() -> dict:
     # scheduler x policy mix grid through the shared controller, refresh on
     (mix_sweep, mus) = timed(run_mix_grid, make_sched_grid())
     assert mix_sweep.stats["n_cells"] == 2 * 2 * 2   # mixes x policies x scheds
+    assert (len(mix_sweep.cells) + mix_sweep.stats["quarantined_cells"]
+            == mix_sweep.stats["n_cells"]), mix_sweep.stats
     if not faulted:
         assert not mix_sweep.quarantined, mix_sweep.quarantined
     sched_ok = bool(mix_sweep.cells)

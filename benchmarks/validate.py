@@ -23,6 +23,11 @@ vectorized JEDEC checker on it from scratch, and pins its sha256 against the
 artifact's ``results.<suite>.commands`` record — so the uploaded trace, the
 checked trace, and the summarized trace are provably the same bytes.
 
+``--check-shards DIR`` re-merges the shard fragments a sharded run streamed
+(``benchmarks.run --shards/--fragments``) and pins the merged cells and
+quarantine records against the artifact's sweeps — proving the streamed
+fragments reassemble bit-identically to the artifact that shipped.
+
 ``--perf-guard`` (perf suite only) additionally compares the artifact's
 ``default_req_per_s`` against the committed seeded reference
 (``benchmarks.perf_bench.REF_REQ_PER_S``) and emits a GitHub ``::warning``
@@ -295,6 +300,54 @@ def validate_refresh(doc: dict) -> str:
             f"darp=+{hi['darp']:.1f}% sarp=+{hi['sarp']:.1f}%")
 
 
+def check_shards(fragment_root: str, doc: dict) -> str:
+    """Re-merge streamed shard fragments and pin them against the artifact.
+
+    ``fragment_root`` is the ``benchmarks.run --fragments`` directory: one
+    subdirectory of ``fragment-*.json`` per sweep (named after the grid).
+    For every subdirectory, the fragments are re-merged from scratch
+    (:func:`repro.experiments.merge_fragments` — which itself proves the
+    coverage contract: every grid index exactly once across cells +
+    quarantined) and the merged cells and quarantine records must equal the
+    corresponding sweep in the artifact *exactly*. A sharded run whose
+    fragments do not reassemble to the artifact it shipped is corrupt.
+    """
+    import os
+
+    from repro.experiments import merge_fragment_dir
+
+    sweeps_by_name: dict[str, list[dict]] = {}
+    for s in doc.get("sweeps") or ():
+        sweeps_by_name.setdefault(s["grid"]["name"], []).append(s)
+    try:
+        subdirs = sorted(
+            d for d in os.listdir(fragment_root)
+            if os.path.isdir(os.path.join(fragment_root, d)))
+    except OSError as e:
+        raise ValidationError(f"fragment dir {fragment_root}: {e}")
+    _check(bool(subdirs), f"no fragment subdirectories under {fragment_root}")
+    checked = []
+    for name in subdirs:
+        _check(name in sweeps_by_name,
+               f"fragments for {name!r} but no such sweep in the artifact")
+        try:
+            merged = merge_fragment_dir(os.path.join(fragment_root, name))
+        except (OSError, ValueError) as e:
+            raise ValidationError(f"fragments for {name!r}: {e}")
+        for sweep in sweeps_by_name[name]:
+            _check(merged["cells"] == sweep["cells"],
+                   f"{name!r}: merged fragment cells != artifact sweep cells")
+            _check(merged["quarantined"] == sweep["quarantined"],
+                   f"{name!r}: merged quarantine records != artifact's")
+            _check(merged["stats"]["n_cells"]
+                   == (sweep.get("stats") or {}).get("n_cells"),
+                   f"{name!r}: n_cells mismatch")
+        checked.append(f"{name}({merged['stats']['n_fragments']}f/"
+                       f"{merged['stats']['n_shards']}s)")
+    return f"{len(checked)} sweep(s) re-merged bit-identical: " \
+           f"{', '.join(checked)}"
+
+
 def check_commands_file(path: str, doc: dict | None = None,
                         suite: str | None = None) -> str:
     """Re-parse a command-trace dump and re-run the JEDEC checker on it.
@@ -357,6 +410,10 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--expect-resume", action="store_true",
                     help="journal mode: fail unless this run replayed "
                          "completed cells from a persistent cache journal")
+    ap.add_argument("--check-shards", metavar="DIR", default=None,
+                    help="re-merge streamed shard fragments under DIR/<grid>/ "
+                         "and pin the merged cells + quarantine records "
+                         "against the artifact's sweeps")
     args = ap.parse_args(argv)
 
     try:
@@ -386,6 +443,8 @@ def main(argv: list[str] | None = None) -> int:
             msg += "; quarantine: " + expect_quarantine(doc)
         if args.expect_resume:
             msg += "; resume: " + expect_resume(doc)
+        if args.check_shards:
+            msg += "; shards: " + check_shards(args.check_shards, doc)
     except ValidationError as e:
         print(f"INVALID {args.artifact} [{suite}]: {e}", file=sys.stderr)
         return 1

@@ -27,8 +27,12 @@ from repro.experiments.runner import (CellResult, MixCellResult,
                                       MixSweepResult, SweepResult,
                                       run_mix_sweep, run_sweep,
                                       trace_for, clear_trace_cache)
-from repro.experiments.artifact import (SWEEP_SCHEMA, BENCH_SCHEMA,
-                                        bench_artifact, write_artifact)
+from repro.experiments.sharding import (Shard, ShardPlan, StreamingAggregator,
+                                        load_fragments, merge_fragment_dir,
+                                        merge_fragments)
+from repro.experiments.artifact import (SWEEP_SCHEMA, FRAGMENT_SCHEMA,
+                                        BENCH_SCHEMA, bench_artifact,
+                                        read_artifact, write_artifact)
 
 __all__ = [
     "Cell", "MixCell", "MixGrid", "SweepGrid",
@@ -37,5 +41,8 @@ __all__ = [
     "Fault", "FaultPlan", "ResiliencePolicy", "SimulatedOOM", "SweepKilled",
     "CellResult", "MixCellResult", "MixSweepResult", "SweepResult",
     "run_mix_sweep", "run_sweep", "trace_for", "clear_trace_cache",
-    "SWEEP_SCHEMA", "BENCH_SCHEMA", "bench_artifact", "write_artifact",
+    "Shard", "ShardPlan", "StreamingAggregator",
+    "load_fragments", "merge_fragment_dir", "merge_fragments",
+    "SWEEP_SCHEMA", "FRAGMENT_SCHEMA", "BENCH_SCHEMA",
+    "bench_artifact", "read_artifact", "write_artifact",
 ]

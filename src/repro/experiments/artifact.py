@@ -1,11 +1,16 @@
 """Versioned JSON artifacts for experiment sweeps.
 
-Two schemas, both carrying an explicit ``schema_version``:
+Three schemas, all carrying an explicit ``schema_version``:
 
 * ``repro.sweep/v1`` — one grid run (produced by ``SweepResult.to_json``):
   ``{schema_version, grid, stats, cells[]}`` where every cell records its
   workload, policy, config overrides, content-hash key, raw ``SimResult``
   counters, and derived metrics (IPC, row-hit rate, energy, ...).
+* ``repro.sweep-fragment/v1`` — one shard's slice of a sweep, streamed to
+  disk while the sweep is still running (:mod:`repro.experiments.sharding`).
+  Fragments carry global cell indices and a grid fingerprint;
+  ``merge_fragments`` reassembles the exact ``repro.sweep/v1`` cell ordering
+  from any set of fragments (see docs/experiments.md, "Sharded execution").
 * ``repro.bench/v1`` — one ``benchmarks.run`` invocation: a set of benchmark
   summaries plus every sweep artifact the benchmarks produced, under a single
   top-level document (see ``docs/experiments.md`` for the field reference).
@@ -19,6 +24,7 @@ import time
 from typing import Any
 
 SWEEP_SCHEMA = "repro.sweep/v1"
+FRAGMENT_SCHEMA = "repro.sweep-fragment/v1"
 BENCH_SCHEMA = "repro.bench/v1"
 
 
@@ -50,12 +56,16 @@ def bench_artifact(results: dict[str, Any], sweeps: list[dict[str, Any]],
                    argv: list[str] | None = None,
                    cache_stats: dict[str, Any] | None = None,
                    seed: int | None = None,
-                   fault_injection: str | None = None) -> dict[str, Any]:
+                   fault_injection: str | None = None,
+                   sharding: dict[str, Any] | None = None) -> dict[str, Any]:
     """Assemble the single top-level document ``benchmarks.run`` emits.
 
     ``fault_injection`` records the ``--inject-faults`` spec (when one was
     active) so a quarantine-bearing artifact is self-describing: validators
     and humans can tell deliberate fault drills from organic failures.
+    ``sharding`` likewise records the shard plan (``--shards``/``--mesh``)
+    so an artifact produced by sharded execution names its device mesh and
+    fragment directory — required by ``validate.py --check-shards``.
     """
     return {
         "schema_version": BENCH_SCHEMA,
@@ -67,6 +77,7 @@ def bench_artifact(results: dict[str, Any], sweeps: list[dict[str, Any]],
         "sweeps": sweeps,
         "cache_stats": cache_stats or {},
         "fault_injection": fault_injection,
+        "sharding": sharding,
     }
 
 
@@ -86,6 +97,12 @@ def write_artifact(path: str, doc: dict[str, Any]) -> str:
         json.dump(doc, f, indent=1, sort_keys=False, default=_default)
     os.replace(tmp, path)
     return path
+
+
+def read_artifact(path: str | os.PathLike) -> dict[str, Any]:
+    """Load any artifact document (sweep, fragment, or bench) back from disk."""
+    with open(path) as f:
+        return json.load(f)
 
 
 def _default(v: Any) -> Any:

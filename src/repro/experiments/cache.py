@@ -92,14 +92,17 @@ class PersistentResultCache(ResultCache):
     replays completed cells from the journal and only executes the remainder.
 
     Crash consistency: ``flush()`` (called by the runner after every
-    committed bucket) writes the *full* journal to ``<path>.tmp.<pid>`` and
-    atomically renames it over ``path``. A reader therefore always sees a
-    complete, previously-valid journal — never a half-written bucket. The
-    loader nevertheless tolerates a torn or malformed trailing line (e.g. a
-    journal appended by a foreign writer that died mid-line): bad lines are
-    counted in ``dropped`` and skipped, never fatal — losing one cached cell
-    costs one re-simulation, while refusing the whole journal would cost the
-    entire sweep.
+    committed bucket or shard) appends the entries added since the last
+    flush and fsyncs — counters are deterministic, so journal entries are
+    write-once and appending keeps per-commit cost proportional to the
+    commit, not the store (sharded sweeps flush once per *shard*; a full
+    rewrite each time would be quadratic at scale). A kill mid-append can
+    tear at most the trailing line, which the loader tolerates: bad lines
+    are counted in ``dropped`` and skipped, never fatal — losing one cached
+    cell costs one re-simulation, while refusing the whole journal would
+    cost the entire sweep. The rare non-append case (an existing key's
+    counters changed) falls back to the original full rewrite via
+    ``<path>.tmp.<pid>`` + atomic rename.
     """
 
     def __init__(self, path: str | os.PathLike) -> None:
@@ -108,6 +111,8 @@ class PersistentResultCache(ResultCache):
         self.loaded = 0     # journal entries restored at construction
         self.dropped = 0    # malformed/torn lines skipped at construction
         self._dirty = False
+        self._appendable: list[str] = []  # brand-new keys since last flush
+        self._rewrite = False             # an existing key changed → rewrite
         self._load()
 
     def _load(self) -> None:
@@ -134,25 +139,42 @@ class PersistentResultCache(ResultCache):
             self.loaded += 1
 
     def put(self, key: str, counters: dict[str, int]) -> None:
-        if self._store.get(key) != counters:
+        cur = self._store.get(key)
+        if cur != counters:
             self._dirty = True
+            if cur is None:
+                self._appendable.append(key)
+            else:
+                self._rewrite = True
         super().put(key, counters)
 
     def flush(self) -> None:
-        """Persist the store: write-to-temp + atomic rename (per bucket)."""
+        """Persist entries added since the last flush (append + fsync), or
+        rewrite the whole journal atomically when an entry changed."""
         if not self._dirty:
             return
         d = os.path.dirname(self.path)
         if d:
             os.makedirs(d, exist_ok=True)
-        tmp = f"{self.path}.tmp.{os.getpid()}"
-        with open(tmp, "w") as f:
-            for key, counters in self._store.items():
-                f.write(json.dumps({"key": key, "counters": counters},
-                                   sort_keys=True) + "\n")
-            f.flush()
-            os.fsync(f.fileno())
-        os.replace(tmp, self.path)
+        if self._rewrite:
+            tmp = f"{self.path}.tmp.{os.getpid()}"
+            with open(tmp, "w") as f:
+                for key, counters in self._store.items():
+                    f.write(json.dumps({"key": key, "counters": counters},
+                                       sort_keys=True) + "\n")
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, self.path)
+            self._rewrite = False
+        else:
+            with open(self.path, "a") as f:
+                for key in self._appendable:
+                    f.write(json.dumps({"key": key,
+                                        "counters": self._store[key]},
+                                       sort_keys=True) + "\n")
+                f.flush()
+                os.fsync(f.fileno())
+        self._appendable = []
         self._dirty = False
 
     def stats(self) -> dict[str, Any]:

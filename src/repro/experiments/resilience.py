@@ -260,6 +260,8 @@ def execute_buckets(
     policy: ResiliencePolicy | None = None,
     fault_plan: FaultPlan | None = None,
     watchdog: StepWatchdog | None = None,
+    bucket_ids: Sequence[int] | None = None,
+    on_quarantine: Callable[[QuarantinedCell], None] | None = None,
 ) -> ResilienceReport:
     """Run every bucket through retry → bisect → quarantine isolation.
 
@@ -269,6 +271,18 @@ def execute_buckets(
     failure can never lose earlier buckets). Results are opaque to this
     layer except for the ``corrupt`` fault, which assumes ``{str: int}``
     counter dicts.
+
+    ``bucket_ids`` overrides the bucket index reported for each submission
+    (default: enumeration order). The sharded scheduler
+    (:mod:`repro.experiments.sharding`) splits one logical bucket into
+    several shard submissions; passing the logical bucket's index for every
+    shard keeps ``FaultPlan`` ``bN`` targets and quarantine provenance
+    identical to the unsharded run.
+
+    ``on_quarantine`` is called once per stranded cell, at the moment the
+    cell is given up on — the streaming-fragment aggregator uses it to
+    account quarantined cells against their shard without waiting for the
+    sweep to finish.
 
     ``KeyboardInterrupt`` and other ``BaseException``s (including the
     injected :class:`SweepKilled`) propagate — only ``Exception``-level
@@ -319,11 +333,15 @@ def execute_buckets(
             run_isolated(bucket, idxs[mid:])
             return
         for i in idxs:
-            report.quarantined.append(QuarantinedCell(
-                index=i, bucket=bucket,
-                error=f"{type(err).__name__}: {err}", attempts=n))
+            q = QuarantinedCell(index=i, bucket=bucket,
+                                error=f"{type(err).__name__}: {err}",
+                                attempts=n)
+            report.quarantined.append(q)
+            if on_quarantine is not None:
+                on_quarantine(q)
 
-    for bucket, idxs in enumerate(buckets):
+    for submission, idxs in enumerate(buckets):
+        bucket = bucket_ids[submission] if bucket_ids is not None else submission
         run_isolated(bucket, list(idxs))
 
     report.ewma_s = watchdog.ewma

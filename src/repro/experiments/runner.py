@@ -51,6 +51,8 @@ from repro.experiments.cache import ResultCache, cell_key
 from repro.experiments.grid import Cell, MixCell, MixGrid, SweepGrid, _json_safe
 from repro.experiments.resilience import (FaultPlan, ResiliencePolicy,
                                           execute_buckets)
+from repro.experiments.sharding import (ShardPlan, StreamingAggregator,
+                                        execute_sharded)
 from repro.fault.watchdog import StepWatchdog
 
 _COUNTER_FIELDS = tuple(f.name for f in dataclasses.fields(SimResult))
@@ -157,6 +159,10 @@ class SweepResult:
         self.cells = cells
         self.stats = stats
         self.quarantined = quarantined or []
+        #: Shard fragments (``repro.sweep-fragment/v1`` dicts) emitted by a
+        #: sharded run; empty for the single-device path. Deliberately NOT
+        #: part of ``to_json`` — the sweep artifact stays byte-compatible.
+        self.fragments: list[dict[str, Any]] = []
 
     def select(self, policy: Policy | None = None,
                workload: str | None = None, **config_eq: Any) -> list[CellResult]:
@@ -220,9 +226,23 @@ class SweepResult:
         }
 
 
+def _resolve_plan(shards: "ShardPlan | int | None",
+                  fragment_dir: str | None) -> ShardPlan | None:
+    """``None`` = the exact single-device path (no aggregator, no fragments).
+    An int becomes a plan over all local devices; ``fragment_dir`` alone
+    implies a 1-shard plan so streaming works without a mesh."""
+    if isinstance(shards, ShardPlan):
+        return shards
+    if shards is not None:
+        return ShardPlan(int(shards))
+    return ShardPlan(1) if fragment_dir is not None else None
+
+
 def run_sweep(grid: SweepGrid, cache: ResultCache | None = None, *,
               resilience: ResiliencePolicy | None = None,
-              fault_plan: FaultPlan | None = None) -> SweepResult:
+              fault_plan: FaultPlan | None = None,
+              shards: ShardPlan | int | None = None,
+              fragment_dir: str | None = None) -> SweepResult:
     """Execute a grid: dedupe via cache, bucket by static shape, vmap, unpack.
 
     Buckets run through the resilience layer (retry → bisect → quarantine;
@@ -231,9 +251,18 @@ def run_sweep(grid: SweepGrid, cache: ResultCache | None = None, *,
     aborting the sweep, and each completed (sub-)bucket is committed to
     ``cache`` — journal included, for a persistent cache — before the next
     one runs, so a crash or kill never loses finished cells.
+
+    ``shards`` (a :class:`~repro.experiments.sharding.ShardPlan` or an int)
+    partitions every bucket's cell axis across devices and streams each
+    shard's slice of the artifact as a ``repro.sweep-fragment/v1`` document
+    (to ``fragment_dir`` when given). Per-cell counters are bit-identical
+    to the single-device path — lanes of a vmapped bucket are independent —
+    and faults strand only the poisoned shard's cells. See
+    :mod:`repro.experiments.sharding` and docs/experiments.md.
     """
     cache = cache if cache is not None else ResultCache()
     resilience = resilience or ResiliencePolicy()
+    plan = _resolve_plan(shards, fragment_dir)
     t0 = time.perf_counter()
     cells = grid.expand()
 
@@ -272,20 +301,53 @@ def run_sweep(grid: SweepGrid, cache: ResultCache | None = None, *,
             cache.put(keys[i], counters)
         cache.flush()   # crash consistency: journal the bucket before moving on
 
-    report = execute_buckets(
-        pending.values(), simulate_bucket, commit_bucket,
-        policy=resilience, fault_plan=fault_plan,
-        watchdog=StepWatchdog(threshold=resilience.straggler_threshold))
+    def q_record(q) -> dict[str, Any]:
+        return {"index": q.index, "workload": cells[q.index].workload.name,
+                "policy": cells[q.index].policy.name,
+                "overrides": {k: _json_safe(v)
+                              for k, v in cells[q.index].override_dict.items()},
+                "key": keys[q.index], "bucket": q.bucket,
+                "error": q.error, "attempts": q.attempts}
 
-    quarantined = [
-        {"index": q.index, "workload": cells[q.index].workload.name,
-         "policy": cells[q.index].policy.name,
-         "overrides": {k: _json_safe(v)
-                       for k, v in cells[q.index].override_dict.items()},
-         "key": keys[q.index], "bucket": q.bucket,
-         "error": q.error, "attempts": q.attempts}
-        for q in report.quarantined
-    ]
+    agg = None
+    if plan is None:
+        report = execute_buckets(
+            pending.values(), simulate_bucket, commit_bucket,
+            policy=resilience, fault_plan=fault_plan,
+            watchdog=StepWatchdog(threshold=resilience.straggler_threshold))
+    else:
+        # Streaming-fragment path: every cell resolves exactly once — cache
+        # hits (and their duplicate-key cells) up front via the prologue,
+        # executed cells (and duplicates their key resolves) per shard commit.
+        indices_by_key: dict[str, list[int]] = {}
+        for i, k in enumerate(keys):
+            indices_by_key.setdefault(k, []).append(i)
+
+        def cell_json(i: int) -> dict[str, Any]:
+            c, k = cells[i], keys[i]
+            doc = CellResult(workload=c.workload, policy=c.policy,
+                             config=c.config, overrides=c.override_dict,
+                             key=k, cache_hit=k in hit_keys,
+                             counters=counters_by_key[k]).to_json()
+            return {"index": i, **doc}
+
+        agg = StreamingAggregator(grid.describe(), len(cells),
+                                  fragment_dir=fragment_dir, plan=plan)
+        agg.prologue([(i, cell_json(i)) for i in range(len(cells))
+                      if keys[i] in counters_by_key])
+
+        def commit_shard(out: dict[int, dict[str, int]]) -> None:
+            commit_bucket(out)
+            agg.commit_cells([(j, cell_json(j)) for i in out
+                              for j in indices_by_key[keys[i]]])
+
+        report, _ = execute_sharded(
+            pending.values(), simulate_bucket, commit_shard,
+            plan=plan, aggregator=agg, quarantine_record=q_record,
+            policy=resilience, fault_plan=fault_plan,
+            watchdog=StepWatchdog(threshold=resilience.straggler_threshold))
+
+    quarantined = [q_record(q) for q in report.quarantined]
     results = [
         CellResult(workload=c.workload, policy=c.policy, config=c.config,
                    overrides=c.override_dict, key=k, cache_hit=k in hit_keys,
@@ -305,7 +367,14 @@ def run_sweep(grid: SweepGrid, cache: ResultCache | None = None, *,
         "elapsed_s": round(time.perf_counter() - t0, 4),
         **report.stats(),
     }
-    return SweepResult(grid, results, stats, quarantined)
+    if plan is not None:
+        stats["sharding"] = {**plan.describe(),
+                             "fragment_dir": fragment_dir,
+                             "n_fragments": len(agg.fragments)}
+    sweep = SweepResult(grid, results, stats, quarantined)
+    if agg is not None:
+        sweep.fragments = agg.fragments
+    return sweep
 
 
 # ---------------------------------------------------------------------------
@@ -360,6 +429,8 @@ class MixSweepResult:
         self.cells = cells
         self.stats = stats
         self.quarantined = quarantined or []
+        #: Shard fragments from a sharded run (see :class:`SweepResult`).
+        self.fragments: list[dict[str, Any]] = []
 
     def select(self, policy: Policy | None = None, mix: str | None = None,
                **config_eq: Any) -> list[MixCellResult]:
@@ -409,7 +480,9 @@ class MixSweepResult:
 
 def run_mix_sweep(grid: MixGrid, *,
                   resilience: ResiliencePolicy | None = None,
-                  fault_plan: FaultPlan | None = None) -> MixSweepResult:
+                  fault_plan: FaultPlan | None = None,
+                  shards: ShardPlan | int | None = None,
+                  fragment_dir: str | None = None) -> MixSweepResult:
     """Execute a :class:`MixGrid`: bucket by static shape, vmap over mixes.
 
     Each (policy, config) bucket becomes ONE
@@ -419,13 +492,16 @@ def run_mix_sweep(grid: MixGrid, *,
     geometry/refresh point and shared across every policy x scheduler cell
     (mix results are not content-hash cached — the multicore scan dominates
     and mix grids are small). Buckets run through the same retry → bisect →
-    quarantine isolation as :func:`run_sweep`.
+    quarantine isolation as :func:`run_sweep`, and ``shards``/``fragment_dir``
+    stream per-shard ``repro.sweep-fragment/v1`` slices exactly like the
+    single-core runner (mix sweeps have no cache, so no prologue fragment).
     """
     from repro.core.dram.multicore import (alone_baseline_cycles,
                                            simulate_multicore_batch)
     from repro.core.dram.schedulers import Scheduler
 
     resilience = resilience or ResiliencePolicy()
+    plan = _resolve_plan(shards, fragment_dir)
     t0 = time.perf_counter()
     cells = grid.expand()
 
@@ -470,19 +546,37 @@ def run_mix_sweep(grid: MixGrid, *,
         return out
 
     results: dict[int, MixCellResult] = {}
-    report = execute_buckets(
-        buckets.values(), simulate_bucket, results.update,
-        policy=resilience, fault_plan=fault_plan,
-        watchdog=StepWatchdog(threshold=resilience.straggler_threshold))
 
-    quarantined = [
-        {"index": q.index, "mix": cells[q.index].mix_name,
-         "policy": cells[q.index].policy.name,
-         "overrides": {k: _json_safe(v)
-                       for k, v in cells[q.index].override_dict.items()},
-         "bucket": q.bucket, "error": q.error, "attempts": q.attempts}
-        for q in report.quarantined
-    ]
+    def q_record(q) -> dict[str, Any]:
+        return {"index": q.index, "mix": cells[q.index].mix_name,
+                "policy": cells[q.index].policy.name,
+                "overrides": {k: _json_safe(v)
+                              for k, v in cells[q.index].override_dict.items()},
+                "bucket": q.bucket, "error": q.error, "attempts": q.attempts}
+
+    agg = None
+    if plan is None:
+        report = execute_buckets(
+            buckets.values(), simulate_bucket, results.update,
+            policy=resilience, fault_plan=fault_plan,
+            watchdog=StepWatchdog(threshold=resilience.straggler_threshold))
+    else:
+        agg = StreamingAggregator(grid.describe(), len(cells),
+                                  kind="mix_sweep",
+                                  fragment_dir=fragment_dir, plan=plan)
+
+        def commit_shard(out: dict[int, MixCellResult]) -> None:
+            results.update(out)
+            agg.commit_cells([(i, {"index": i, **out[i].to_json()})
+                              for i in out])
+
+        report, _ = execute_sharded(
+            buckets.values(), simulate_bucket, commit_shard,
+            plan=plan, aggregator=agg, quarantine_record=q_record,
+            policy=resilience, fault_plan=fault_plan,
+            watchdog=StepWatchdog(threshold=resilience.straggler_threshold))
+
+    quarantined = [q_record(q) for q in report.quarantined]
     stats = {
         "n_cells": len(cells),
         "n_cores": grid.n_cores,
@@ -491,7 +585,14 @@ def run_mix_sweep(grid: MixGrid, *,
         "elapsed_s": round(time.perf_counter() - t0, 4),
         **report.stats(),
     }
-    return MixSweepResult(grid,
-                          [results[i] for i in range(len(cells))
-                           if i in results],
-                          stats, quarantined)
+    if plan is not None:
+        stats["sharding"] = {**plan.describe(),
+                             "fragment_dir": fragment_dir,
+                             "n_fragments": len(agg.fragments)}
+    mix_sweep = MixSweepResult(grid,
+                               [results[i] for i in range(len(cells))
+                                if i in results],
+                               stats, quarantined)
+    if agg is not None:
+        mix_sweep.fragments = agg.fragments
+    return mix_sweep

@@ -1,0 +1,56 @@
+"""Shared fixtures — chiefly the forced-multi-device subprocess helper.
+
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` must be set before
+jax is imported, so tests that need a real multi-device mesh cannot run in
+the pytest process (where jax is long since imported with however many
+devices CI gave it). ``multi_device_run`` executes a python snippet in a
+fresh interpreter with the flag set, captures a single JSON payload the
+snippet prints on its last line, and hands it back for assertions — one
+subprocess per scenario group, not per assertion, since each pays a full
+jax import + compile.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+#: Snippets print this sentinel before their JSON payload so incidental
+#: stdout (XLA chatter, prints under debug) never corrupts the channel.
+RESULT_MARK = "RESULT:"
+
+
+def run_in_devices(code: str, n_devices: int = 4, timeout: int = 600) -> dict:
+    """Run ``code`` in a fresh python with ``n_devices`` forced host CPU
+    devices; return the JSON payload it printed after ``RESULT_MARK``."""
+    env = os.environ.copy()
+    flags = [t for t in env.get("XLA_FLAGS", "").split()
+             if "xla_force_host_platform_device_count" not in t]
+    flags.append(f"--xla_force_host_platform_device_count={n_devices}")
+    env["XLA_FLAGS"] = " ".join(flags)
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = os.pathsep.join(
+        [str(REPO_ROOT / "src"), str(REPO_ROOT)]
+        + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          cwd=REPO_ROOT, capture_output=True, text=True,
+                          timeout=timeout)
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"multi-device subprocess failed (rc={proc.returncode})\n"
+            f"--- stdout ---\n{proc.stdout}\n--- stderr ---\n{proc.stderr}")
+    payload = [l for l in proc.stdout.splitlines()
+               if l.startswith(RESULT_MARK)]
+    assert payload, f"no {RESULT_MARK} line in subprocess stdout:\n{proc.stdout}"
+    return json.loads(payload[-1][len(RESULT_MARK):])
+
+
+@pytest.fixture(scope="session")
+def multi_device_run():
+    return run_in_devices

@@ -1,0 +1,90 @@
+"""Regenerate the golden shard-fragment fixtures in tests/data/shard_fragments.
+
+The fixture scenario is deliberately the smallest one that exercises every
+fragment role: 2 workloads x 2 policies at one geometry (4 cells, 2 policy
+buckets) run at 2 shards — submissions [0], [2], [1], [3] — with a
+persistent injected fault on cell 2, so the fixture set contains three
+committed-cell fragments and one quarantine-only fragment. Fragments carry
+no wall-clock fields, so a live run reproduces the committed documents
+exactly — except the shard ``device`` string, which names whatever device
+the executing host assigned and is normalized away by the comparison in
+``test_sharding.py`` (which also pins the byte-for-byte merge against
+``merged.json``; merged documents carry no shard metadata at all).
+
+Usage (from the repo root, after an intentional behaviour change)::
+
+    PYTHONPATH=src python tests/make_golden_shard_fragments.py
+
+The script validates the regenerated fragments — full coverage on merge,
+quarantine on exactly cell 2, cell parity with the clean single-device run —
+before overwriting anything, so a broken runner can never pin broken gold.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir, "src"))
+
+from repro.core.dram import PAPER_WORKLOADS, Policy  # noqa: E402
+from repro.experiments import (FaultPlan, ResiliencePolicy, ResultCache,  # noqa: E402
+                               SweepGrid, merge_fragment_dir, run_sweep,
+                               write_artifact)
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "data", "shard_fragments")
+
+#: Zero-wait retries: fixture "attempts" counts stay deterministic with no
+#: wall-clock cost (3 = max_retries + 1 on the stranded shard).
+FAST = ResiliencePolicy(backoff_base_s=0.0, sleep=lambda s: None)
+
+
+def make_grid() -> SweepGrid:
+    return SweepGrid(
+        name="golden_shards",
+        workloads=tuple(p for p in PAPER_WORKLOADS
+                        if p.name in ("mcf", "lbm")),
+        policies=(Policy.BASELINE, Policy.SALP1),
+        n_requests=96,
+        config_axes={"n_subarrays": (4,)},
+    )
+
+
+def run(out_dir: str):
+    """One sharded, faulted run streaming its fragments to ``out_dir``."""
+    return run_sweep(make_grid(), ResultCache(), resilience=FAST,
+                     fault_plan=FaultPlan.parse("raise@c2:p"),
+                     shards=2, fragment_dir=out_dir)
+
+
+def main() -> None:
+    import shutil
+    import tempfile
+
+    tmp = tempfile.mkdtemp(prefix="golden_shards_")
+    try:
+        sweep = run(tmp)
+        # validate before pinning: coverage, the intended quarantine, parity
+        merged = merge_fragment_dir(tmp)
+        assert merged["stats"] == {"n_cells": 4, "merged_cells": 3,
+                                   "quarantined_cells": 1, "n_fragments": 4,
+                                   "n_shards": 4}, merged["stats"]
+        assert [q["index"] for q in merged["quarantined"]] == [2]
+        # cell 2 = mcf/BASELINE (PAPER_WORKLOADS lists lbm before mcf)
+        ref = run_sweep(make_grid(), ResultCache())
+        want = [c.to_json() for c in ref.cells
+                if not (c.workload.name == "mcf"
+                        and c.policy == Policy.BASELINE)]
+        assert merged["cells"] == want, "sharded cells diverge from reference"
+
+        os.makedirs(OUT_DIR, exist_ok=True)
+        for old in os.listdir(OUT_DIR):
+            os.remove(os.path.join(OUT_DIR, old))
+        for name in sorted(os.listdir(tmp)):
+            shutil.copy(os.path.join(tmp, name), os.path.join(OUT_DIR, name))
+        write_artifact(os.path.join(OUT_DIR, "merged.json"), merged)
+        print(f"pinned {len(sweep.fragments)} fragments + merged.json "
+              f"under {OUT_DIR}")
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,181 @@
+"""Memory-technology comparison: DDR3-1066 / LPDDR4-3200 / PCM-PALP.
+
+The memtech axis (``SimConfig.memtech``, PR 10) binds a per-technology
+timing pack (``DramTiming.preset``) and sweeps it like any other SimConfig
+field. This bench answers the question the axis exists for: does
+subarray-level parallelism survive a change of memory technology?
+
+* **SALP ladder per technology** — one grid, memory-intensive subset x
+  (BASELINE/SALP1/SALP2/MASA) x (ddr3/lpddr4/pcm_palp): the paper's
+  SALP1 <= SALP2 <= MASA speedup ordering must hold on EVERY technology
+  (``salp_ladder_ok``; re-checked from the raw table by
+  ``benchmarks/validate.py`` in CI). Subarray == partition on PCM (PALP,
+  arXiv 1908.07966 — partition-level parallelism is the same mechanism).
+* **DDR3 column bit-pin** — ``memtech="ddr3"`` must be byte-for-byte the
+  historical default: the lbm/2000/seed-7 MASA cell is compared against
+  the literal counters pinned by ``tests/test_dram_engine.py``
+  (``ddr3_pin_ok``). A memtech plumbing change that drifts the default
+  path fails the bench, not just the test suite.
+* **PALP read-priority scheduling** — on PCM the ~150 ns programming pulse
+  keeps a partition write-busy long after the bus frees; PALP's scheduler
+  rung (``Scheduler.PALP_RP``) steers pending reads into write-ready
+  partitions. On a 4-core mix it must cut MEAN READ LATENCY vs plain
+  FR-FCFS on PCM (total cycles are the wrong metric: the write-drain tail
+  is not what cores stall on). The same pair is reported on DDR3 as the
+  control — the rung is designed for PCM's write asymmetry.
+* **Command-level fidelity** — one exported + JEDEC-checked + dumped slice
+  per technology extreme: the PCM stream must contain ZERO refresh
+  commands (PCM cells need no refresh; ``SimConfig`` rejects any PCM
+  refresh policy outright), the LPDDR4 stream under per-bank refresh must
+  contain some. CI re-parses and re-checks the PCM dump via
+  ``benchmarks.validate --check-commands``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from benchmarks.common import (SEED, command_slice, emit, mem_intensive,
+                               per_sim_cell_us, run_grid, timed)
+from repro.core.dram import (MEMTECHS, Policy, ROW_SPACE_STRIDE, Scheduler,
+                             SimConfig, generate_trace, workload)
+from repro.core.dram.multicore import simulate_multicore
+from repro.experiments import SweepGrid
+
+N = 2000
+SUBSET = mem_intensive(15.0)
+POLICIES = (Policy.BASELINE, Policy.SALP1, Policy.SALP2, Policy.MASA)
+TECHS = tuple(MEMTECHS)  # ("ddr3", "lpddr4", "pcm_palp")
+
+#: Command-level fidelity slices. The PCM dump is the one CI re-checks
+#: (``--check-commands``); its zero-REF property is the artifact's proof
+#: that the no-refresh technology really emits no refresh.
+COMMANDS_OUT = "artifacts/commands_memtech_pcm.trace"
+COMMANDS_LPDDR4_OUT = "artifacts/commands_memtech_lpddr4.trace"
+
+#: The DDR3 default-path pin: lbm, 2000 requests, seed 7, MASA, default
+#: config — the exact cell tests/test_dram_engine.py pins as LBM_EXPECTED
+#: ("default", MASA). memtech="ddr3" must reproduce it bit-for-bit.
+DDR3_PIN_WANT = (15410, 266, 208, 1734, 373, 32542, 645656)
+
+#: 4-core mixes for the PALP scheduler comparison (>= 4 cores: with fewer
+#: heads the scheduler rarely has a real choice and the rung is inert).
+PALP_MIX = ("mcf", "lbm", "stream_copy", "milc")
+PALP_N = 300
+
+
+def make_grid() -> SweepGrid:
+    return SweepGrid(
+        name="memtech",
+        workloads=SUBSET,
+        policies=POLICIES,
+        n_requests=N,
+        seed=SEED,
+        config_axes={"memtech": TECHS},
+    )
+
+
+def _ddr3_pin() -> tuple[bool, tuple, tuple]:
+    from repro.core.dram import simulate
+    # the memtech field must be invisible on the default path...
+    assert (dataclasses.astuple(SimConfig(memtech="ddr3"))
+            == dataclasses.astuple(SimConfig()))
+    # ...and the pinned cell must reproduce the test suite's literals
+    tr = generate_trace(workload("lbm"), 2000, seed=7)
+    res = simulate(tr, Policy.MASA, SimConfig(memtech="ddr3"))
+    got = tuple(int(np.asarray(getattr(res, f))) for f in
+                ("total_cycles", "n_act", "n_pre", "n_hit", "n_sasel",
+                 "sum_latency", "sa_open_cycles"))
+    return got == DDR3_PIN_WANT, got, DDR3_PIN_WANT
+
+
+def _palp_read_latency(memtech: str, sched: Scheduler) -> float:
+    mix = [generate_trace(workload(m), PALP_N, seed=SEED,
+                          row_space_offset=ROW_SPACE_STRIDE * i)
+           for i, m in enumerate(PALP_MIX)]
+    r = simulate_multicore(mix, Policy.MASA,
+                           SimConfig(memtech=memtech,
+                                     scheduler=sched)).shared
+    return float(int(r.sum_latency) / int(r.n_reads))
+
+
+def run() -> dict:
+    (sweep, us) = timed(run_grid, make_grid())
+    per_cell = per_sim_cell_us(sweep, us)
+
+    # SALP ladder per technology: mean speedup over that tech's own baseline
+    table: dict[str, dict[str, float]] = {}
+    salp_ladder_ok = True
+    for tech in TECHS:
+        gains = {pol.name: float(sweep.speedup_pct(pol, memtech=tech).mean())
+                 for pol in POLICIES[1:]}
+        table[tech] = gains
+        if not (gains["MASA"] >= gains["SALP2"] >= gains["SALP1"] > 0):
+            salp_ladder_ok = False
+
+    pin_ok, pin_got, pin_want = _ddr3_pin()
+
+    palp = {}
+    for tech in ("pcm_palp", "ddr3"):
+        (fr, fus) = timed(_palp_read_latency, tech, Scheduler.FRFCFS)
+        (rp, rus) = timed(_palp_read_latency, tech, Scheduler.PALP_RP)
+        palp[tech] = dict(frfcfs_read_lat=fr, palp_rp_read_lat=rp,
+                          improvement_pct=float((fr / rp - 1) * 100))
+        emit(f"memtech.palp_rp.{tech}", fus + rus,
+             f"read_lat:frfcfs={fr:.2f};palp_rp={rp:.2f};"
+             f"gain={palp[tech]['improvement_pct']:+.1f}%")
+    palp_ok = palp["pcm_palp"]["palp_rp_read_lat"] \
+        < palp["pcm_palp"]["frfcfs_read_lat"]
+
+    # command-level fidelity at the two technology extremes
+    (cmd_pcm, cus) = timed(
+        command_slice, generate_trace(SUBSET[0], N, seed=SEED), Policy.MASA,
+        SimConfig.for_tech("pcm_palp"), COMMANDS_OUT)
+    (cmd_lp, lus) = timed(
+        command_slice, generate_trace(SUBSET[0], N, seed=SEED), Policy.MASA,
+        SimConfig.for_tech("lpddr4", refresh_policy="per_bank"),
+        COMMANDS_LPDDR4_OUT)
+    pcm_refs = cmd_pcm["ops"].get("REF", 0)
+    lp_refs = cmd_lp["ops"].get("REF", 0)
+    emit("memtech.commands.pcm", cus,
+         f"n={cmd_pcm['n_commands']};rules={cmd_pcm['n_rules']};"
+         f"refs={pcm_refs};checker_ok")
+    emit("memtech.commands.lpddr4", lus,
+         f"n={cmd_lp['n_commands']};rules={cmd_lp['n_rules']};"
+         f"refs={lp_refs};checker_ok")
+
+    emit("memtech.grid", per_cell,
+         f"cells={sweep.stats['n_cells']};ladder_ok={salp_ladder_ok};"
+         f"ddr3_pin_ok={pin_ok}")
+    for tech, gains in table.items():
+        row = ";".join(f"{p}=+{v:.1f}%" for p, v in gains.items())
+        emit(f"memtech.salp.{tech}", 0.0, row)
+
+    failures = []
+    if not salp_ladder_ok:
+        failures.append(f"SALP ladder violated on some memtech: {table}")
+    if not pin_ok:
+        failures.append(f"ddr3 column drifted off the pinned default: "
+                        f"{pin_got} != {pin_want}")
+    if not palp_ok:
+        failures.append(f"PALP_RP did not improve PCM read latency: {palp}")
+    if pcm_refs != 0:
+        failures.append(f"PCM command stream has {pcm_refs} REF commands")
+    if lp_refs == 0:
+        failures.append("LPDDR4 per-bank stream emitted no REF commands "
+                        "(refresh never engaged — shrink the trace?)")
+    if failures:
+        raise AssertionError("; ".join(failures))
+
+    return dict(memtechs=list(TECHS), table=table,
+                salp_ladder_ok=salp_ladder_ok,
+                ddr3_pin=dict(ok=pin_ok, got=list(pin_got),
+                              want=list(pin_want)),
+                palp=palp, palp_ok=palp_ok,
+                commands=cmd_pcm, commands_lpddr4=cmd_lp,
+                n_cells=sweep.stats["n_cells"])
+
+
+if __name__ == "__main__":
+    run()

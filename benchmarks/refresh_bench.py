@@ -21,11 +21,9 @@ blocking refresh).
 """
 from __future__ import annotations
 
-import dataclasses
-
 from benchmarks.common import (SEED, command_slice, emit, mem_intensive,
                                per_sim_cell_us, run_grid, timed)
-from repro.core.dram import DDR3_1066, Policy, SimConfig, generate_trace
+from repro.core.dram import DramTiming, Policy, SimConfig, generate_trace
 from repro.experiments import SweepGrid
 
 N = 4000
@@ -35,10 +33,11 @@ SUBSET = mem_intensive(15.0)
 #: DARP under MASA) exported + JEDEC-checked + dumped for CI re-validation.
 COMMANDS_OUT = "artifacts/commands_refresh.trace"
 
-#: Density ladder: (tRFC, tRFCpb) in command cycles. 8 Gb matches the
-#: default DDR3 part; 16/32 Gb follow the tRFC growth HPCA'14 projects
-#: (~530/890 ns), with tRFCpb ~= 0.4 * tRFC throughout.
-DENSITIES = {"8Gb": (160, 64), "16Gb": (280, 112), "32Gb": (475, 190)}
+#: Density ladder, in Gb. The (tRFC, tRFCpb) pairs per density live in the
+#: canonical per-technology table now (``DramTiming.preset``'s
+#: ``density_gb`` axis — 8 Gb matches the default DDR3 part; 16/32 Gb
+#: follow the tRFC growth HPCA'14 projects, tRFCpb ~= 0.4 * tRFC).
+DENSITIES = ("8Gb", "16Gb", "32Gb")
 
 #: Extended-temperature refresh interval (tREFI halves above 85 C).
 T_REFI_HOT = 2080
@@ -48,9 +47,8 @@ POLICIES = (Policy.BASELINE, Policy.MASA)
 
 
 def _timing(gb: str):
-    rfc, rfc_pb = DENSITIES[gb]
-    return dataclasses.replace(DDR3_1066, t_refi=T_REFI_HOT, t_rfc=rfc,
-                               t_rfc_pb=rfc_pb)
+    return DramTiming.preset("ddr3", density_gb=int(gb[:-2]),
+                             t_refi=T_REFI_HOT)
 
 
 def make_grid() -> SweepGrid:
@@ -127,8 +125,9 @@ def run() -> dict:
     return dict(ladder_ok=ladder_ok, table=table, commands=cmd,
                 darp_recovered_pct_32Gb=darp_recovered,
                 sarp_minus_dsarp_pp_32Gb=sarp_vs_dsarp,
-                densities={gb: dict(t_rfc=v[0], t_rfc_pb=v[1])
-                           for gb, v in DENSITIES.items()},
+                densities={gb: dict(t_rfc=_timing(gb).t_rfc,
+                                    t_rfc_pb=_timing(gb).t_rfc_pb)
+                           for gb in DENSITIES},
                 t_refi=T_REFI_HOT,
                 n_cells=sweep.stats["n_cells"])
 

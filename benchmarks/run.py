@@ -67,6 +67,9 @@ REGISTRY: tuple[Bench, ...] = (
     Bench("refresh", "benchmarks.refresh_bench", ("refresh",),
           "Sec. 6.1 extension: refresh ladder REFab/REFpb/DARP/SARP/DSARP "
           "x 8-32 Gb (grid sweep)"),
+    Bench("memtech", "benchmarks.memtech_bench", ("memtech",),
+          "PR 10: DDR3/LPDDR4/PCM-PALP technology packs — SALP ladder per "
+          "memtech, PALP_RP read-priority on PCM, zero-REF PCM stream"),
     Bench("multicore", "benchmarks.multicore_bench", ("system",),
           "Sec. 4/9.3: multicore + TCM scheduling (batched mixes)"),
     Bench("sched", "benchmarks.sched_bench", ("system", "sched"),

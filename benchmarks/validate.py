@@ -378,12 +378,52 @@ def check_commands_file(path: str, doc: dict | None = None,
             + ("" if rec is None else ", sha pinned"))
 
 
+def validate_memtech(doc: dict) -> str:
+    validate_common(doc)
+    r = doc["results"].get("memtech") or {}
+    # SALP ladder on every technology, re-checked from the raw table
+    _check(r.get("salp_ladder_ok") is True,
+           f"salp_ladder_ok: {r.get('salp_ladder_ok')}")
+    table = r.get("table") or {}
+    _check(set(table) == {"ddr3", "lpddr4", "pcm_palp"},
+           f"memtechs: {set(table)}")
+    for tech, gains in table.items():
+        _check(set(gains) == {"SALP1", "SALP2", "MASA"},
+               f"{tech} policies: {set(gains)}")
+        _check(gains["MASA"] >= gains["SALP2"] >= gains["SALP1"] > 0,
+               f"{tech} SALP ladder violated: {gains}")
+    # the default path must not have drifted: ddr3 column == pinned fixture
+    pin = r.get("ddr3_pin") or {}
+    _check(pin.get("ok") is True and pin.get("got") == pin.get("want"),
+           f"ddr3 pin: {pin}")
+    # PALP's premise: the read-priority rung beats FR-FCFS on PCM reads
+    palp = (r.get("palp") or {}).get("pcm_palp") or {}
+    _check(palp.get("palp_rp_read_lat", float("inf"))
+           < palp.get("frfcfs_read_lat", 0),
+           f"PALP_RP read latency on PCM: {palp}")
+    # PCM emits NO refresh commands; LPDDR4 under per-bank refresh must
+    _validate_commands_record("memtech", r)
+    pcm_refs = (r.get("commands") or {}).get("ops", {}).get("REF")
+    _check(pcm_refs in (None, 0), f"PCM stream has REF commands: {pcm_refs}")
+    lp = r.get("commands_lpddr4") or {}
+    _check(lp.get("ops", {}).get("REF", 0) > 0,
+           f"LPDDR4 per-bank stream has no REF commands: {lp.get('ops')}")
+    sweep = next((s for s in doc.get("sweeps", ())
+                  if s["grid"]["name"] == "memtech"), None)
+    _check(sweep is not None, "memtech sweep missing")
+    return (f"memtech ok: MASA +{table['ddr3']['MASA']:.1f}% (ddr3) "
+            f"+{table['lpddr4']['MASA']:.1f}% (lpddr4) "
+            f"+{table['pcm_palp']['MASA']:.1f}% (pcm) | PALP_RP "
+            f"{palp.get('improvement_pct', 0):+.1f}% read lat on PCM")
+
+
 SUITES: dict[str, Callable[[dict], str]] = {
     "smoke": validate_smoke,
     "mapping": validate_mapping,
     "perf": validate_perf,
     "refresh": validate_refresh,
     "kernels": validate_kernels,
+    "memtech": validate_memtech,
 }
 
 

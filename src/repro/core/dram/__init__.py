@@ -29,14 +29,26 @@ The simulator is layered (see docs/architecture.md):
                         rings, request window, refresh bookkeeping; ONE scan
                         step shared by single- and multi-core simulation.
   * ``schedulers.py`` — pluggable request schedulers (``Scheduler``): FCFS,
-                        FR-FCFS, FR-FCFS+SALP-aware, TCM ranking.
+                        FR-FCFS, FR-FCFS+SALP-aware, TCM ranking, and the
+                        PALP read-priority rung for PCM (docs/memtech.md).
+  * ``registry.py``   — the ONE spec-string resolver every config axis
+                        (mapping / workload / refresh_policy / backend /
+                        mesh / memtech) routes through: uniform difflib
+                        near-miss ``ValueError`` on typos.
+  * ``timing.py``     — per-technology timing packs (``DramTiming.preset``;
+                        ``SimConfig.memtech``): the paper's DDR3-1066
+                        baseline, LPDDR4-3200, and PCM-PALP.
   * ``commands.py``   — DRAM command-stream export (``simulate_commands``):
                         the same scan, with a per-step packed command log
                         decoded to a ``CommandTrace`` (docs/commands.md).
   * ``checker.py``    — vectorized JEDEC timing-rule checker
                         (``check_trace``) over exported command streams.
 """
-from repro.core.dram.timing import DramTiming, EnergyModel, CoreModel, DDR3_1066, DEFAULT_ENERGY, DEFAULT_CORE
+from repro.core.dram import registry
+from repro.core.dram.timing import (DramTiming, EnergyModel, CoreModel,
+                                    DDR3_1066, LPDDR4_3200, PCM_PALP,
+                                    MEMTECHS, resolve_memtech,
+                                    DEFAULT_ENERGY, DEFAULT_CORE)
 from repro.core.dram.policies import Policy
 from repro.core.dram.refresh import RefreshPolicy, REFRESH_LADDER
 from repro.core.dram.schedulers import Scheduler, ALL_SCHEDULERS
@@ -59,7 +71,9 @@ from repro.core.dram.checker import (TimingRule, Violation, CheckResult,
                                      rules_for, check_trace, min_legal_cycles)
 
 __all__ = [
-    "DramTiming", "EnergyModel", "CoreModel", "DDR3_1066", "DEFAULT_ENERGY", "DEFAULT_CORE",
+    "registry",
+    "DramTiming", "EnergyModel", "CoreModel", "DDR3_1066", "LPDDR4_3200",
+    "PCM_PALP", "MEMTECHS", "resolve_memtech", "DEFAULT_ENERGY", "DEFAULT_CORE",
     "Policy", "RefreshPolicy", "REFRESH_LADDER", "Scheduler", "ALL_SCHEDULERS",
     "AddressMapping", "BitSlicedMapping", "ContiguousMapping",
     "GoldenRatioMapping", "XorMapping", "DEFAULT_MAPPING", "NAMED_MAPPINGS",

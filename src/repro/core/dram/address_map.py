@@ -48,7 +48,7 @@ import dataclasses
 
 import numpy as np
 
-from repro.core.dram.errors import did_you_mean
+from repro.core.dram import registry
 
 #: Golden-ratio multiplier of the pinned default mapping (Knuth's 2^32 / phi).
 GOLDEN_MULT = 2654435761
@@ -204,6 +204,8 @@ NAMED_MAPPINGS = {
 #: The pinned default spec (the historical hard-coded frontend).
 DEFAULT_MAPPING = "golden"
 
+registry.register("address mapping", tuple(sorted(NAMED_MAPPINGS)))
+
 
 def mapping_for(spec: str | AddressMapping, n_banks: int, n_subarrays: int,
                 rows_per_bank: int) -> AddressMapping:
@@ -228,8 +230,7 @@ def mapping_for(spec: str | AddressMapping, n_banks: int, n_subarrays: int,
         order = tuple(spec[len("bits:"):].split("-"))
         return BitSlicedMapping(n_banks, n_subarrays, rows_per_bank,
                                 order=order)  # type: ignore[arg-type]
-    hint = did_you_mean(str(spec), sorted(NAMED_MAPPINGS))
-    raise ValueError(
-        f"unknown address mapping {spec!r}{hint}; expected one of "
-        f"{sorted(NAMED_MAPPINGS)} or 'bits:<msb-to-lsb order>' "
-        f"(a permutation of {_FIELDS}, e.g. 'bits:row-sa-bank')")
+    raise registry.spec_error(
+        "address mapping", spec, sorted(NAMED_MAPPINGS),
+        extra=f" or 'bits:<msb-to-lsb order>' (a permutation of {_FIELDS}, "
+              f"e.g. 'bits:row-sa-bank')")

@@ -26,13 +26,16 @@ max), so no monotonicity assumption is needed.
 Model caveats the rule table encodes (docs/commands.md has the JEDEC
 provenance per rule):
 
-* ``PREA`` (closed-row auto-precharge) is exempt from tRAS/tWR — the
-  engine issues it at ``max(data_end, t_col + tRTP)``, which can precede
-  ``ACT + tRAS``; real devices delay the internal precharge instead. PREA
-  still participates in tRP (it gates the next ACT) and tRTP.
+* ``PREA`` (closed-row auto-precharge) is held to the FULL precharge rule
+  set — tRAS from the access's ACT, tWR after a write, tRTP after a read,
+  and tRP into the next ACT — because the engine delays the internal
+  precharge exactly like a real device (``engine._step_math``'s
+  closed-row block mirrors the explicit-PRE gates). The historical
+  PREA-exemption caveat is retired.
 * SALP-2's column-release rule (COL >= other-subarray PRE + 1) covers
-  explicit PREs only: the model issues a closed-row PREA *after* later
-  column commands may already have issued (same caveat as above).
+  explicit PREs only: a closed-row PREA's issue cycle may land *after*
+  later column commands in array order (the log is causal, not
+  cycle-sorted), so the pairwise rule would mis-bind it.
 * Refresh closes rows without PRE commands (REF implies precharge of its
   scope), so a PRE may legally target an already-closed subarray
   (``row == -1``) when a refresh beat it to the closure.
@@ -119,7 +122,7 @@ def rules_for(policy: Policy, t: DramTiming,
     """
     if policy == Policy.IDEAL:
         policy = Policy.BASELINE
-    act, pre, prea = (int(L.OP_ACT),), (int(L.OP_PRE),), (int(L.OP_PREA),)
+    act, pre = (int(L.OP_ACT),), (int(L.OP_PRE),)
     rd, wr = (int(L.OP_RD),), (int(L.OP_WR),)
     sasel, ref = (int(L.OP_SASEL),), (int(L.OP_REF),)
     rules = [
@@ -127,13 +130,13 @@ def rules_for(policy: Policy, t: DramTiming,
                    "JEDEC DDR3: ACT to internal RD/WR (same row)"),
         TimingRule("tRP", _PRE_ALL, act, "subarray", t.t_rp,
                    "JEDEC DDR3: PRE to ACT, same subarray (local bitlines)"),
-        TimingRule("tRAS", act, pre, "subarray", t.t_ras,
-                   "JEDEC DDR3: minimum row-open time (PREA exempt: model "
-                   "folds the auto-precharge into the access)"),
-        TimingRule("tWR", wr, pre, "subarray",
+        TimingRule("tRAS", act, _PRE_ALL, "subarray", t.t_ras,
+                   "JEDEC DDR3: minimum row-open time (PREA included: the "
+                   "engine delays the internal auto-precharge past tRAS)"),
+        TimingRule("tWR", wr, _PRE_ALL, "subarray",
                    t.t_cwl + t.t_bl + t.t_wr,
                    "JEDEC DDR3: write recovery, WR issue + CWL + BL + tWR "
-                   "before PRE (PREA exempt, see module docstring)"),
+                   "before any precharge, auto (PREA) included"),
         TimingRule("tRTP", rd, _PRE_ALL, "subarray", t.t_rtp,
                    "JEDEC DDR3: read to precharge"),
         TimingRule("tCCD", _COL, _COL, "rank", t.t_ccd,

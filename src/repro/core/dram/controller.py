@@ -429,7 +429,8 @@ def _build_stepC(policy: int, scheduler: int, t: DramTiming,
                     else None)
         key = request_key(scheduler, bank_st, hb, hs, hw, vis, rank, C, live,
                           ref_debt=ref_debt,
-                          ref_urgent=t.ref_postpone_max - 1)
+                          ref_urgent=t.ref_postpone_max - 1,
+                          hwr=h[:, L.RQ_WR] != 0)
         c = jnp.argmin(key).astype(jnp.int32)
 
         # ONE gather of the chosen head's fields + step bookkeeping

@@ -44,11 +44,12 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core.dram import registry
 from repro.core.dram import state_layout as L
 from repro.core.dram.policies import Policy
 from repro.core.dram.refresh import RefreshPolicy
 from repro.core.dram.schedulers import Scheduler
-from repro.core.dram.timing import DramTiming, DDR3_1066
+from repro.core.dram.timing import DramTiming, DDR3_1066, MEMTECHS
 from repro.core.dram.trace import Trace, to_ideal, stack_traces
 
 _NEG = L.NEG
@@ -57,6 +58,8 @@ _RING = 64  # completion ring size; controller.validate_mlp_window enforces
 
 #: Valid ``SimConfig.backend`` values (see the field's docstring).
 BACKENDS = frozenset({"scan", "pallas", "pallas-interpret"})
+
+registry.register("backend", tuple(sorted(BACKENDS)))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -133,12 +136,33 @@ class SimConfig:
     # other field. The Pallas backends refuse ``emit_commands`` (the kernel
     # carries no per-step command log) — use backend="scan" for exports.
     backend: str = "scan"
+    # Memory-technology pack (docs/memtech.md): which per-technology timing
+    # pack backs the simulation —
+    #   "ddr3"     — the paper's DDR3-1066 baseline (DDR3_1066, bit-pinned),
+    #   "lpddr4"   — LPDDR4-3200-class pack, per-bank-refresh-centric (the
+    #                native home of the REFpb/DARP/SARP ladder),
+    #   "pcm_palp" — Phase Change Memory after PALP (arXiv 1908.07966):
+    #                asymmetric read/write latencies (slow array writes keep
+    #                the partition busy) and NO refresh — any
+    #                ``refresh_policy`` but "none" raises.
+    # When ``timing`` is left at the DDR3_1066 default, ``__post_init__``
+    # resolves it to the pack (``DramTiming.preset(memtech)``); an explicit
+    # ``timing`` is kept as-is, so sweeps can still override individual
+    # constants with ``dataclasses.replace`` on a pack. A *static* axis like
+    # every other field: part of cache keys and bucket signatures.
+    memtech: str = "ddr3"
 
     def __post_init__(self) -> None:
-        if self.backend not in BACKENDS:
-            raise ValueError(
-                f"SimConfig.backend must be one of {sorted(BACKENDS)}; got "
-                f"{self.backend!r}")
+        registry.resolve("backend", self.backend,
+                         valid=tuple(sorted(BACKENDS)))
+        # Resolve the memtech spec first (typos raise the shared registry
+        # error), then bind the technology's timing pack unless the caller
+        # pinned an explicit DramTiming.
+        tech = registry.resolve("memtech", str(self.memtech).lower(),
+                                valid=tuple(MEMTECHS))
+        object.__setattr__(self, "memtech", tech)
+        if tech != "ddr3" and self.timing == DDR3_1066:
+            object.__setattr__(self, "timing", MEMTECHS[tech])
         # Canonicalize the deprecated boolean pair into refresh_policy and
         # null the pair, so semantically-equal configs are field-identical:
         # astuple/asdict — and therefore result-cache keys and vmap bucket
@@ -164,6 +188,36 @@ class SimConfig:
         object.__setattr__(self, "refresh_policy", rp.spec)
         object.__setattr__(self, "refresh", None)
         object.__setattr__(self, "dsarp", None)
+        # PCM cells are non-volatile at DRAM retention scales: there IS no
+        # refresh to model, and the pcm_palp pack zeroes the refresh fields
+        # — silently running a refresh ladder against it would divide the
+        # schedule by a zero interval. Conflicts raise, loudly.
+        if self.memtech == "pcm_palp" and rp != RefreshPolicy.NONE:
+            raise ValueError(
+                f"memtech='pcm_palp' forces refresh_policy='none' (PCM "
+                f"cells need no refresh), but got "
+                f"refresh_policy={rp.spec!r}; drop the refresh_policy (or "
+                f"sweep it only over the DRAM memtechs)")
+
+    @classmethod
+    def for_tech(cls, memtech: str, *, density_gb: int | None = None,
+                 t_refi: int | None = None, **overrides) -> "SimConfig":
+        """Canonical per-technology constructor.
+
+        Builds the config with ``timing = DramTiming.preset(memtech,
+        density_gb=..., t_refi=...)`` — the blessed way to get a
+        density-scaled pack without hand-editing tRFC tables (what
+        refresh_bench used to inline). ``overrides`` are ordinary
+        ``SimConfig`` fields; passing ``timing`` explicitly is rejected
+        (use ``SimConfig(memtech=..., timing=...)`` directly for that).
+        """
+        if "timing" in overrides:
+            raise ValueError(
+                "SimConfig.for_tech builds the timing pack itself; pass "
+                "SimConfig(memtech=..., timing=...) to pin explicit timing")
+        timing = DramTiming.preset(memtech, density_gb=density_gb,
+                                   t_refi=t_refi)
+        return cls(memtech=str(memtech).lower(), timing=timing, **overrides)
 
     def geometry_for(self, policy: Policy) -> tuple[int, int]:
         """IDEAL turns every subarray into a real bank."""
@@ -374,7 +428,19 @@ def _step_math(policy: int, t: DramTiming, refresh_mode: int,
         # global structures exactly like an explicit PRE, so the policy ladder
         # applies: baseline serializes the NEXT ACT to the whole bank behind
         # tRP; SALP-1 overlaps all but the command slot; SALP-2/MASA are local.
-        auto_pre = jnp.maximum(data_end, t_col + t.t_rtp)
+        # The internal precharge obeys the SAME gates as an explicit PRE —
+        # tRAS from the access's ACT, tRTP from a read, write recovery (tWR)
+        # from a write's data end — mirroring the own-lane ras_done/wrr_done
+        # updates above, so the checker holds PREA to the full PRE rule set
+        # (the historical model let it fire up to 2 cycles inside tRAS and
+        # ahead of tWR; docs/commands.md used to carry that as a caveat).
+        ras_ready = jnp.where(act_needed, t_act + t.t_ras,
+                              own[L.SA_RAS_DONE])
+        rtp_ready = jnp.where(is_wr, zero, t_col + t.t_rtp)
+        wr_ready = jnp.where(is_wr, data_end + t.t_wr,
+                             jnp.where(act_needed, zero, own[L.SA_WRR_DONE]))
+        auto_pre = jnp.maximum(jnp.maximum(data_end, ras_ready),
+                               jnp.maximum(rtp_ready, wr_ready))
         open_row = jnp.where(own_m, _NEG, open_row)
         pre_done = jnp.where(own_m,
                              jnp.maximum(pre_done, auto_pre + t.t_rp), pre_done)

@@ -43,7 +43,7 @@ from __future__ import annotations
 
 import enum
 
-from repro.core.dram.errors import did_you_mean
+from repro.core.dram import registry
 
 
 class RefreshPolicy(enum.IntEnum):
@@ -78,17 +78,20 @@ class RefreshPolicy(enum.IntEnum):
 
     @classmethod
     def from_spec(cls, spec: "str | RefreshPolicy") -> "RefreshPolicy":
-        """Resolve a spec string; raises with the nearest match on a typo."""
+        """Resolve a spec string; raises with the nearest match on a typo.
+
+        Thin alias over the shared spec registry
+        (:func:`repro.core.dram.registry.resolve`), so the near-miss
+        ``ValueError`` is format-identical across every spec axis.
+        """
         if isinstance(spec, cls):
             return spec
-        try:
-            return cls[str(spec).upper()]
-        except KeyError:
-            valid = sorted(p.spec for p in cls)
-            hint = did_you_mean(str(spec).lower(), valid)
-            raise ValueError(f"unknown refresh policy {spec!r}{hint}; "
-                             f"expected one of {valid}") from None
+        return registry.resolve("refresh policy", spec,
+                                mapping={p.spec: p for p in cls},
+                                normalize=str.lower)
 
+
+registry.register("refresh policy", tuple(p.spec for p in RefreshPolicy))
 
 #: Every rung that actually refreshes (the sweepable ladder).
 REFRESH_LADDER = (RefreshPolicy.ALL_BANK, RefreshPolicy.PER_BANK,

@@ -21,6 +21,19 @@ Ties break toward the lowest core index, matching ``jnp.argmin``.
   TCM           FR-FCFS composed with application-aware thread ranking
                 (TCM-style, Kim et al. MICRO'10): the latency-sensitive
                 (low-MPKI) half of the cores is strictly prioritized.
+  PALP_RP       PALP-style read-priority scheduling for PCM (arXiv
+                1908.07966, Sec. 5): FR-FCFS with one extra tier between
+                row hits and misses that lifts pending READS whose target
+                *partition* (subarray) is not serving a write's slow
+                programming pulse. A PCM write keeps its partition busy for
+                ~tWR after the data burst; a read scheduled into it stalls
+                on the pulse, while a read into a write-free partition
+                issues immediately — so the rung keeps the channel issuing
+                reads into write-ready partitions and lets busy partitions
+                drain their pulses in the shadow. Reads are what the core
+                is stalled on (PALP's premise); writes keep only their
+                FR-FCFS tiers. Meaningful on any technology, designed for
+                memtech "pcm_palp" (docs/memtech.md).
 """
 from __future__ import annotations
 
@@ -33,7 +46,9 @@ from repro.core.dram import state_layout as L
 
 #: Tier spacing. Must exceed any realistic visibility cycle so tiers are
 #: strict; small enough that key arithmetic stays within int32 (the TCM
-#: rank subtraction can reach -2 * _BIG, the SALP miss tier +2 * _BIG).
+#: rank subtraction can reach -2 * _BIG, the SALP/PALP_RP miss tiers
+#: +2 * _BIG, and the DARP urgency boost composes another -4 * _BIG on
+#: top — every combination stays well inside +/- 2**31 and below _DEAD).
 _BIG = np.int32(1 << 28)
 
 #: Key assigned to cores whose stream is exhausted — larger than any live key.
@@ -52,18 +67,24 @@ class Scheduler(enum.IntEnum):
     FRFCFS = 1        # row hits first, then oldest
     FRFCFS_SALP = 2   # + prefer already-activated subarrays (MASA-aware)
     TCM = 3           # FR-FCFS + latency-sensitive thread ranking
+    PALP_RP = 4       # PALP read-priority (PCM write-asymmetry aware)
 
     @property
     def pretty(self) -> str:
-        return {0: "FCFS", 1: "FR-FCFS", 2: "FR-FCFS+SALP", 3: "TCM"}[int(self)]
+        return {0: "FCFS", 1: "FR-FCFS", 2: "FR-FCFS+SALP", 3: "TCM",
+                4: "PALP-RP"}[int(self)]
 
 
+#: The DRAM scheduling disciplines sched_bench sweeps (the historical axis).
+#: PALP_RP is deliberately NOT here: it targets the PCM write asymmetry and
+#: is swept by the memtech suite (benchmarks/memtech_bench.py) instead.
 ALL_SCHEDULERS = (Scheduler.FCFS, Scheduler.FRFCFS, Scheduler.FRFCFS_SALP,
                   Scheduler.TCM)
 
 
 def request_key(scheduler: int, bank_state: dict, hb, hs, hw, vis, rank,
-                n_cores: int, live, ref_debt=None, ref_urgent: int = 0):
+                n_cores: int, live, ref_debt=None, ref_urgent: int = 0,
+                hwr=None):
     """int32 selection key per core; the controller serves ``argmin``.
 
     ``scheduler`` and ``n_cores`` are static; the rest are traced. The key
@@ -83,6 +104,14 @@ def request_key(scheduler: int, bank_state: dict, hb, hs, hw, vis, rank,
     old queued miss (the scan serves requests in bus order, so scheduling a
     far-future request first would stall the channel behind it).
 
+    Write asymmetry (PALP_RP — docs/memtech.md): ``hwr`` is the heads'
+    is-write bit (``reqs[:, L.RQ_WR]`` as bool). PALP_RP keeps FR-FCFS's
+    row-hit tier and inserts a middle tier for pending reads whose
+    partition's write recovery (``SA_WRR_DONE``) has drained by the time
+    the data bus frees: a read into a write-busy partition would stall on
+    the PCM programming pulse, so reads that can issue now outrank every
+    miss. The other disciplines ignore ``hwr``.
+
     Refresh awareness (DARP, refresh mode 4 — docs/refresh.md): when the
     controller passes ``ref_debt`` (the heads' banks' postponed-refresh
     counters), pending requests to a bank whose debt has reached
@@ -91,6 +120,9 @@ def request_key(scheduler: int, bank_state: dict, hb, hs, hw, vis, rank,
     it. Orthogonal to — and composed with — every discipline.
     """
     scheduler = Scheduler(scheduler)
+    if scheduler == Scheduler.PALP_RP and hwr is None:
+        raise ValueError("Scheduler.PALP_RP needs the heads' is-write bits "
+                         "(hwr); the controller passes reqs[:, RQ_WR]")
     orow = bank_state["sa"][hb, hs, L.SA_OPEN_ROW]
     hit = orow == hw
     sa_open = orow != L.NEG
@@ -106,6 +138,17 @@ def request_key(scheduler: int, bank_state: dict, hb, hs, hw, vis, rank,
         key = vis + jnp.where(pending & hit, 0, _BIG)
         latency_sensitive = pending & (rank < (n_cores // 2))
         key = key - jnp.where(latency_sensitive, 2 * _BIG, 0)
+    elif scheduler == Scheduler.PALP_RP:
+        is_rd = ~hwr
+        # Partition write-ready: the head's subarray has drained its write
+        # recovery by the time the shared bus frees (the earliest this head
+        # could be served anyway). A read into a still-programming PCM
+        # partition would stall ~tWR on the pulse; one that is not goes now.
+        wr_ready = (bank_state["sa"][hb, hs, L.SA_WRR_DONE]
+                    <= bank_state["scalars"][L.SC_DATA_BUS_FREE])
+        key = vis + jnp.where(
+            pending & hit, 0,
+            jnp.where(pending & is_rd & wr_ready, _BIG, 2 * _BIG))
     else:  # pragma: no cover - enum is exhaustive
         raise ValueError(f"unknown scheduler {scheduler!r}")
     if ref_debt is not None:

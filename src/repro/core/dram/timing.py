@@ -23,6 +23,8 @@ from __future__ import annotations
 
 import dataclasses
 
+from repro.core.dram import registry
+
 
 @dataclasses.dataclass(frozen=True)
 class DramTiming:
@@ -59,9 +61,121 @@ class DramTiming:
     def t_rc(self) -> int:
         return self.t_ras + self.t_rp
 
+    @classmethod
+    def preset(cls, memtech: str = "ddr3", *, density_gb: int | None = None,
+               t_refi: int | None = None) -> "DramTiming":
+        """Canonical per-technology timing pack (the ``memtech`` axis).
+
+        ``memtech`` names the pack (``"ddr3"`` / ``"lpddr4"`` /
+        ``"pcm_palp"``; typos raise the shared registry near-miss error).
+        ``density_gb`` scales the refresh-burst pair (tRFC/tRFCpb) with
+        device density for the refreshing technologies — 8/16/32 Gb, the
+        sweep axis of docs/refresh.md — and is rejected for PCM, which has
+        no refresh at all. ``t_refi`` overrides the refresh interval (the
+        hot-temperature 2x-rate point refresh_bench sweeps).
+
+        ``preset("ddr3")`` with no overrides is *bit-identical* to the
+        pinned :data:`DDR3_1066` baseline (asserted by tests), so the
+        default path of every existing fixture is untouched.
+        """
+        name = memtech_spec(memtech)
+        base = MEMTECHS[name]
+        if density_gb is not None:
+            table = _DENSITY_RFC.get(name)
+            if table is None:
+                raise ValueError(
+                    f"memtech {name!r} has no refresh, so density_gb only "
+                    f"scales nothing — drop it (PCM cells need no refresh)")
+            try:
+                rfc, rfc_pb = table[int(density_gb)]
+            except KeyError:
+                raise ValueError(
+                    f"no {name} refresh-burst table for density_gb="
+                    f"{density_gb!r}; expected one of "
+                    f"{sorted(table)}") from None
+            base = dataclasses.replace(base, t_rfc=rfc, t_rfc_pb=rfc_pb)
+        if t_refi is not None:
+            if base.t_refi == 0:
+                raise ValueError(
+                    f"memtech {name!r} has no refresh; a t_refi override is "
+                    f"meaningless")
+            base = dataclasses.replace(base, t_refi=int(t_refi))
+        return base
+
 
 #: DDR3-1066 7-7-7, the paper's device class.
 DDR3_1066 = DramTiming()
+
+#: LPDDR4-3200-class pack, expressed in its OWN command clock (1600 MHz,
+#: 0.625 ns/cycle — cycle counts are therefore larger than DDR3-1066's even
+#: where the nanosecond latency is similar). Values follow a JESD209-4
+#: LPDDR4-3200 speed bin: RL=28 / WL=14, tRCD/tRPpb/tWR ~18 ns, tRAS 42 ns,
+#: BL16 (8 command cycles on the bus), tFAW 40 ns. The pack is
+#: per-bank-refresh-centric — LPDDR4 is the technology the REFpb/DARP/SARP
+#: ladder (Chang et al. HPCA'14) targets: tRFCab 280 ns vs tRFCpb 140 ns at
+#: 8 Gb, and the spec's 8-deep postpone window.
+LPDDR4_3200 = DramTiming(
+    t_cl=28, t_cwl=14, t_rcd=29, t_rp=29, t_ras=68, t_wr=29, t_rtp=12,
+    t_bl=8, t_ccd=8, t_wtr=16, t_rtw=12, t_rrd=16, t_rrd_sa=16, t_faw=64,
+    t_sa=1, t_refi=6240, t_rfc=448, t_rfc_pb=224, ref_postpone_max=8)
+
+#: PCM pack after PALP (arXiv 1908.07966; device latencies from Lee et al.
+#: ISCA'09), on a DDR3-1066-style interface clock (1.876 ns/cycle) so the
+#: bus-side constants stay comparable to the baseline. The two PCM-defining
+#: asymmetries:
+#:   * slow array reads — activation senses the PCM array into the row
+#:     buffer (~60 ns => tRCD=32), but reads are NON-destructive, so there
+#:     is no restore: tRP is a mere buffer-reset (4 cycles) and tRAS only
+#:     covers the sensing window;
+#:   * much slower writes — a SET/RESET programming pulse (~150 ns =>
+#:     tWR=80) keeps the *partition* (the PCM analogue of a subarray)
+#:     write-busy long after the bus transfer ends. That write occupancy is
+#:     exactly the problem PALP's read-priority scheduling
+#:     (:data:`repro.core.dram.schedulers.Scheduler.PALP_RP`) works around.
+#: PCM cells need NO refresh: the refresh fields are zeroed and
+#: ``SimConfig`` rejects any ``refresh_policy`` but ``"none"`` for
+#: ``memtech="pcm_palp"``.
+PCM_PALP = DramTiming(
+    t_cl=7, t_cwl=6, t_rcd=32, t_rp=4, t_ras=36, t_wr=80, t_rtp=4,
+    t_bl=4, t_ccd=4, t_wtr=4, t_rtw=6, t_rrd=4, t_rrd_sa=4, t_faw=20,
+    t_sa=1, t_refi=0, t_rfc=0, t_rfc_pb=0, ref_postpone_max=0)
+
+#: memtech spec -> timing pack (the ``SimConfig.memtech`` axis).
+MEMTECHS: dict[str, DramTiming] = {
+    "ddr3": DDR3_1066,
+    "lpddr4": LPDDR4_3200,
+    "pcm_palp": PCM_PALP,
+}
+
+registry.register("memtech", tuple(MEMTECHS))
+
+#: Per-technology density scaling for the refresh-burst pair, in the pack's
+#: own command cycles. DDR3 rows are the values refresh_bench has always
+#: swept (8 Gb = the DDR3_1066 defaults; 16/32 Gb from the HPCA'14 scaling
+#: the refresh docs cite); LPDDR4 rows scale the JESD209-4 tRFCab/tRFCpb
+#: pair the same way. PCM has no refresh, hence no row.
+_DENSITY_RFC: dict[str, dict[int, tuple[int, int]]] = {
+    "ddr3": {8: (160, 64), 16: (280, 112), 32: (475, 190)},
+    "lpddr4": {8: (448, 224), 16: (608, 304), 32: (896, 448)},
+}
+
+
+def resolve_memtech(spec: "str | DramTiming") -> DramTiming:
+    """Memtech spec -> timing pack; registry near-miss ValueError on typos.
+
+    Accepts a :class:`DramTiming` instance (returned as-is) so call sites
+    can take "a pack or its name" uniformly.
+    """
+    if isinstance(spec, DramTiming):
+        return spec
+    return registry.resolve("memtech", spec, mapping=MEMTECHS,
+                            normalize=str.lower)
+
+
+def memtech_spec(spec: str) -> str:
+    """Canonical memtech spelling (validates via the shared registry)."""
+    resolve_memtech(spec)
+    return str(spec).lower()
 
 
 @dataclasses.dataclass(frozen=True)

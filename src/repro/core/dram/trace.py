@@ -40,7 +40,7 @@ from typing import IO, Sequence
 
 import numpy as np
 
-from repro.core.dram.errors import did_you_mean
+from repro.core.dram import registry
 from repro.core.dram.address_map import (AddressMapping, DEFAULT_MAPPING,
                                          mapping_for)
 from repro.core.dram.timing import CoreModel, DEFAULT_CORE
@@ -116,15 +116,19 @@ WORKLOADS_BY_NAME: dict[str, WorkloadProfile] = {p.name: p for p in PAPER_WORKLO
 ROW_SPACE_STRIDE = 4096
 
 
+registry.register("workload", tuple(sorted(WORKLOADS_BY_NAME)))
+
+
 def workload(name: str) -> WorkloadProfile:
     """Suite profile by name; raises with the valid names (and the nearest
-    match) on a typo."""
-    try:
-        return WORKLOADS_BY_NAME[name]
-    except KeyError:
-        hint = did_you_mean(str(name), WORKLOADS_BY_NAME)
-        raise KeyError(f"unknown workload {name!r}{hint}; expected one of "
-                       f"{sorted(WORKLOADS_BY_NAME)}") from None
+    match) on a typo.
+
+    Thin alias over :func:`repro.core.dram.registry.resolve`, so a typo'd
+    workload raises the same near-miss ``ValueError`` as every other spec
+    axis. (Historically this raised ``KeyError``; the registry
+    consolidation unified the exception type across axes.)
+    """
+    return registry.resolve("workload", name, mapping=WORKLOADS_BY_NAME)
 
 
 #: ``Trace.dump`` / ``Trace.from_file`` header (carries what the text columns

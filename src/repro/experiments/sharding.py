@@ -54,12 +54,53 @@ from typing import Any, Callable, Iterable, Sequence
 
 import numpy as np
 
+from repro.core.dram import registry
 from repro.experiments.artifact import (FRAGMENT_SCHEMA, SWEEP_SCHEMA,
                                         read_artifact, write_artifact)
 from repro.experiments.resilience import (FaultPlan, QuarantinedCell,
                                           ResiliencePolicy, ResilienceReport,
                                           execute_buckets)
 from repro.fault.watchdog import StepWatchdog
+
+#: Platform names the mesh spec may address (``"<platform>[:<count>]"``).
+#: A static table rather than a jax probe so a typo on a TPU-less host
+#: still near-misses toward the name the user meant.
+_MESH_PLATFORMS = ("cpu", "gpu", "tpu")
+
+registry.register("mesh platform", ("auto",) + _MESH_PLATFORMS)
+
+
+def resolve_mesh(mesh: str | None = None) -> list:
+    """Mesh spec -> device list (the spec-resolution half of ``--mesh``).
+
+    Grammar: ``"auto"``/``None``/``""`` = all local devices, ``"<count>"``
+    = first N local devices, ``"<platform>"`` = all devices of that
+    platform, ``"<platform>:<count>"`` = first N of that platform. A
+    platform typo raises the shared registry near-miss ``ValueError``
+    (same format as every other spec axis); a syntactically valid spec
+    that selects zero devices raises a plain ``ValueError``.
+    """
+    import jax
+    spec = (mesh or "auto").strip().lower()
+    if spec in ("", "auto"):
+        devices = list(jax.devices())
+    elif spec.isdigit():
+        devices = list(jax.devices())[:int(spec)]
+    else:
+        platform, _, count = spec.partition(":")
+        if platform not in _MESH_PLATFORMS:
+            raise registry.spec_error(
+                "mesh platform", platform, ("auto",) + _MESH_PLATFORMS,
+                extra=" or '<count>' / '<platform>:<count>'")
+        if count and not count.isdigit():
+            raise ValueError(
+                f"mesh spec {mesh!r}: count {count!r} is not an integer")
+        devices = list(jax.devices(platform))
+        if count:
+            devices = devices[:int(count)]
+    if not devices:
+        raise ValueError(f"mesh spec {mesh!r} selects no devices")
+    return devices
 
 
 @dataclasses.dataclass(frozen=True)
@@ -97,26 +138,15 @@ class ShardPlan:
     @classmethod
     def resolve(cls, shards: int | None = None,
                 mesh: str | None = None) -> "ShardPlan":
-        """Build a plan from CLI-ish specs.
+        """Build a plan from CLI-ish specs (thin alias over
+        :func:`resolve_mesh` for the device-selection half).
 
         ``mesh`` selects devices: ``"auto"``/``None`` = all local devices,
         ``"4"`` = first 4 devices, ``"cpu:4"`` = first 4 devices of that
         platform, ``"cpu"`` = all devices of that platform. ``shards``
         defaults to one shard per selected device.
         """
-        import jax
-        spec = (mesh or "auto").strip().lower()
-        if spec in ("", "auto"):
-            devices = list(jax.devices())
-        elif spec.isdigit():
-            devices = list(jax.devices())[:int(spec)]
-        else:
-            platform, _, count = spec.partition(":")
-            devices = list(jax.devices(platform))
-            if count:
-                devices = devices[:int(count)]
-        if not devices:
-            raise ValueError(f"mesh spec {mesh!r} selects no devices")
+        devices = resolve_mesh(mesh)
         return cls(shards if shards else len(devices), devices)
 
     def device_for(self, shard_index: int) -> Any:

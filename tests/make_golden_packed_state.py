@@ -1,0 +1,152 @@
+"""Regenerate ``tests/data/golden_packed_state.json`` (the counter pins).
+
+NOT a test module (no ``test_`` prefix — pytest must not collect it). Run
+
+    PYTHONPATH=src python tests/make_golden_packed_state.py
+
+after an *intentional* timing-semantics change. The cell grid is exactly the
+one ``test_packed_state.TestGoldenParity`` replays: ``CONFIGS`` x policies x
+seeds 0-5 for single-core, plus the multicore scheduler product that
+``test_fixture_covers_all_axes`` derives from ``for s in Scheduler``.
+
+Safety rail: before overwriting, every regenerated cell that exists in the
+committed fixture must be bit-identical UNLESS its key is listed in
+``EXPECT_CHANGED`` below — a regeneration that silently drifts cells outside
+the intended blast radius fails loudly instead of poisoning the fixture.
+Cells present in the old fixture but absent from the new grid also fail
+(pins must never quietly vanish). Update EXPECT_CHANGED alongside the
+engine change that motivates the regen, and say why in the comment.
+"""
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))
+
+from test_packed_state import CONFIGS, counters, random_trace  # noqa: E402
+
+from repro.core.dram import (ROW_SPACE_STRIDE, Policy, Scheduler, SimConfig,
+                             generate_trace, simulate, workload)
+from repro.core.dram.multicore import simulate_multicore
+
+OUT = os.path.join(os.path.dirname(__file__), "data",
+                   "golden_packed_state.json")
+
+#: (kind, config, policy, seed[, scheduler]) keys whose counters are ALLOWED
+#: to differ from the committed fixture this regeneration.
+#:
+#: PR 10: the closed-row auto-precharge (internal PREA) now respects
+#: tRAS/tRTP/tWR like an explicit PRE (engine._step_math), so every
+#: closed-row cell legitimately moves; open-row cells must not.
+EXPECT_CHANGED = {
+    (kind, config, policy.name, seed)
+    for kind in ("single",)
+    for config in ("closed", "closed_refresh")
+    for policy in Policy
+    for seed in range(6)
+}
+
+#: Multicore grid: the configs that sweep the full scheduler axis, and the
+#: refresh-mode configs pinned under FRFCFS only (see test_packed_state).
+MC_FULL = ("default", "refresh", "dsarp", "darp")
+MC_FRFCFS_ONLY = ("per_bank", "sarp")
+MC_SEEDS = (1, 7)
+MC_POLICIES = (Policy.BASELINE, Policy.MASA)
+
+
+def single_key(cell):
+    return ("single", cell["config"], cell["policy"], cell["seed"])
+
+
+def multi_key(cell):
+    return ("multicore", cell["config"], cell["policy"], cell["seed"],
+            cell["scheduler"])
+
+
+def build_single():
+    cells = []
+    for seed in range(6):
+        tr = random_trace(seed)
+        for config in CONFIGS:
+            for policy in Policy:
+                res = simulate(tr, policy, SimConfig(**CONFIGS[config]))
+                cells.append(dict(config=config, policy=policy.name,
+                                  seed=seed, counters=counters(res)))
+    return cells
+
+
+def build_multicore():
+    cells = []
+    grid = [(c, s) for c in MC_FULL for s in Scheduler]
+    grid += [(c, Scheduler.FRFCFS) for c in MC_FRFCFS_ONLY]
+    for config, sched in grid:
+        for policy in MC_POLICIES:
+            for seed in MC_SEEDS:
+                mix = [generate_trace(workload(m), 150, seed=seed,
+                                      row_space_offset=ROW_SPACE_STRIDE * i)
+                       for i, m in enumerate(("mcf", "lbm"))]
+                cfg = SimConfig(scheduler=sched, **CONFIGS[config])
+                r = simulate_multicore(mix, policy, cfg)
+                cells.append(dict(config=config, scheduler=sched.name,
+                                  policy=policy.name, seed=seed,
+                                  counters=counters(r.shared),
+                                  core_cycles=[int(x) for x in
+                                               r.core_cycles]))
+    return cells
+
+
+def validate(old, new):
+    old_by_key = {}
+    for cell in old["single"]:
+        old_by_key[single_key(cell)] = cell
+    for cell in old["multicore"]:
+        old_by_key[multi_key(cell)] = cell
+    new_by_key = {}
+    for cell in new["single"]:
+        new_by_key[single_key(cell)] = cell
+    for cell in new["multicore"]:
+        new_by_key[multi_key(cell)] = cell
+
+    dropped = sorted(set(old_by_key) - set(new_by_key))
+    assert not dropped, f"regen would DROP pinned cells: {dropped[:5]}"
+
+    drifted = []
+    for key, old_cell in old_by_key.items():
+        if key[:4] in EXPECT_CHANGED:
+            continue
+        new_cell = new_by_key[key]
+        same = old_cell["counters"] == new_cell["counters"]
+        if "core_cycles" in old_cell:
+            same = same and old_cell["core_cycles"] == new_cell["core_cycles"]
+        if not same:
+            drifted.append((key, old_cell["counters"],
+                            new_cell["counters"]))
+    assert not drifted, (
+        f"{len(drifted)} cells drifted OUTSIDE the expected blast radius "
+        f"(update EXPECT_CHANGED only for intentional changes): "
+        f"{drifted[:3]}")
+
+    added = sorted(set(new_by_key) - set(old_by_key))
+    changed = sorted(k for k in old_by_key
+                     if k[:4] in EXPECT_CHANGED
+                     and old_by_key[k]["counters"]
+                     != new_by_key[k]["counters"])
+    return added, changed
+
+
+def main():
+    with open(OUT) as f:
+        old = json.load(f)
+    new = {"single": build_single(), "multicore": build_multicore()}
+    added, changed = validate(old, new)
+    with open(OUT, "w") as f:
+        json.dump(new, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {OUT}: {len(new['single'])} single + "
+          f"{len(new['multicore'])} multicore cells "
+          f"({len(added)} added, {len(changed)} changed, rest verified "
+          f"bit-identical)")
+
+
+if __name__ == "__main__":
+    main()

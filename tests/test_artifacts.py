@@ -25,6 +25,7 @@ LOCAL_ARTIFACTS = {
     "perf": REPO / "artifacts" / "BENCH_perf.json",
     "refresh": REPO / "artifacts" / "refresh.json",
     "kernels": REPO / "artifacts" / "kernels.json",
+    "memtech": REPO / "artifacts" / "memtech.json",
 }
 
 _COMMON = {"schema_version": "repro.bench/v1", "git_sha": "f" * 40, "seed": 7}
@@ -76,6 +77,25 @@ def make_doc(suite: str) -> dict:
                                    for pol in ("BASELINE", "MASA")}
                               for gb in ("8Gb", "16Gb", "32Gb")}}},
                 "sweeps": [{"grid": {"name": "refresh"}}]}
+    if suite == "memtech":
+        return {**_COMMON,
+                "results": {"memtech": {
+                    "salp_ladder_ok": True,
+                    "table": {t: {"SALP1": 5.0, "SALP2": 15.0, "MASA": 30.0}
+                              for t in ("ddr3", "lpddr4", "pcm_palp")},
+                    "ddr3_pin": {"ok": True,
+                                 "got": [15410, 266], "want": [15410, 266]},
+                    "palp": {"pcm_palp": {"frfcfs_read_lat": 97.3,
+                                          "palp_rp_read_lat": 93.3,
+                                          "improvement_pct": 4.3}},
+                    "commands": {"checker_ok": True, "n_commands": 10,
+                                 "sha256": "a" * 64,
+                                 "ops": {"ACT": 3, "RD": 7}},
+                    "commands_lpddr4": {"checker_ok": True, "n_commands": 12,
+                                        "sha256": "b" * 64,
+                                        "ops": {"ACT": 3, "RD": 7,
+                                                "REF": 2}}}},
+                "sweeps": [{"grid": {"name": "memtech"}}]}
     if suite == "kernels":
         return {**_COMMON,
                 "results": {"kernels": {
@@ -156,6 +176,48 @@ def test_refresh_rejects_summary_side_ladder_lie():
             pens["darp"] = pens["all_bank"] + 5.0
     with pytest.raises(V.ValidationError, match="ladder violated"):
         V.validate_refresh(doc)
+
+
+def test_memtech_rejects_pcm_refresh_commands():
+    """The acceptance gate: a PCM command stream with ANY refresh command
+    means the no-refresh technology refreshed — hard fail."""
+    doc = make_doc("memtech")
+    doc["results"]["memtech"]["commands"]["ops"]["REF"] = 3
+    with pytest.raises(V.ValidationError, match="REF commands"):
+        V.validate_memtech(doc)
+
+
+def test_memtech_rejects_missing_lpddr4_refresh():
+    """The control: LPDDR4 under per-bank refresh must emit REFs (proves
+    the zero on PCM is a property, not a dead refresh path)."""
+    doc = make_doc("memtech")
+    del doc["results"]["memtech"]["commands_lpddr4"]["ops"]["REF"]
+    with pytest.raises(V.ValidationError, match="no REF commands"):
+        V.validate_memtech(doc)
+
+
+def test_memtech_rejects_palp_regression():
+    doc = make_doc("memtech")
+    palp = doc["results"]["memtech"]["palp"]["pcm_palp"]
+    palp["palp_rp_read_lat"] = palp["frfcfs_read_lat"] + 1.0
+    with pytest.raises(V.ValidationError, match="PALP_RP"):
+        V.validate_memtech(doc)
+
+
+def test_memtech_rejects_ddr3_pin_drift():
+    """salp_ladder_ok / pin ok flags cannot lie: the validator re-checks
+    got == want from the raw record."""
+    doc = make_doc("memtech")
+    doc["results"]["memtech"]["ddr3_pin"]["got"] = [1, 2]
+    with pytest.raises(V.ValidationError, match="ddr3 pin"):
+        V.validate_memtech(doc)
+
+
+def test_memtech_rejects_inverted_salp_ladder():
+    doc = make_doc("memtech")
+    doc["results"]["memtech"]["table"]["pcm_palp"]["MASA"] = 1.0
+    with pytest.raises(V.ValidationError, match="SALP ladder"):
+        V.validate_memtech(doc)
 
 
 def test_kernels_rejects_oracle_disagreement():

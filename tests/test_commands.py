@@ -174,6 +174,43 @@ class TestDumpFormat:
         assert check_trace(CommandTrace.loads(ct.dumps())).ok
 
 
+class TestFawSweep:
+    """tFAW as a sweepable constraint (PR 10): the engine must stay legal —
+    and the checker's sliding-window rule must stay engaged — at every point
+    of a four-activate-window sweep under MASA."""
+
+    #: DDR3_1066 has t_faw=20 = 5*t_rrd (never binding for <= 5 banks);
+    #: the sweep spans loose -> severely over-constrained.
+    FAWS = (8, 20, 40, 80)
+
+    @staticmethod
+    def _cell(t_faw):
+        cfg = SimConfig(timing=dataclasses.replace(
+            SimConfig().timing, t_faw=t_faw))
+        # bank-spread random trace: lots of channel-wide ACT pressure
+        return simulate_commands(random_trace(11, mlp=16), Policy.MASA, cfg)
+
+    def test_every_cell_is_legal_and_window_limited(self):
+        prev_cycles = 0
+        for t_faw in self.FAWS:
+            res, ct = self._cell(t_faw)
+            r = check_trace(ct)
+            assert r.ok, (t_faw, r.violations[:3])
+            # the stream has enough ACTs for the 5-deep window to engage
+            assert int(np.sum(ct.op == L.OP_ACT)) >= 5
+            # actively prove the checker's window rule sees this stream:
+            # judging the SAME commands against a tighter window must flag
+            # tFAW (and only once the window actually tightens).
+            strict = dataclasses.replace(
+                ct, timing=dataclasses.replace(ct.timing, t_faw=400))
+            names = {v.rule for v in check_trace(
+                strict, structural=False).violations}
+            assert "tFAW" in names, t_faw
+            # pure timing gate: tightening tFAW can only slow the trace
+            assert int(res.total_cycles) >= prev_cycles
+            prev_cycles = int(res.total_cycles)
+
+
 class TestRuleTable:
     def test_policy_ladder_rules(self):
         t = SimConfig().timing

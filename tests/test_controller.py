@@ -120,6 +120,11 @@ class TestPinnedMulticoreRegression:
         Scheduler.FRFCFS: (6699, 161, 639, [6699, 4061]),       # pre-refactor
         Scheduler.FRFCFS_SALP: (6915, 167, 633, [6915, 4897]),
         Scheduler.TCM: (7070, 153, 647, [7070, 3047]),          # pre-refactor
+        # PALP_RP pins the read-priority rung's semantics going forward. On
+        # this DRAM mix its shared counters happen to coincide with
+        # FRFCFS_SALP (both add one middle tier over FR-FCFS) but the
+        # per-core split differs — the rung favors mcf's read-heavy stream.
+        Scheduler.PALP_RP: (6915, 167, 633, [6127, 6915]),
     }
 
     @pytest.mark.parametrize("sched", list(Scheduler))
@@ -163,7 +168,8 @@ class TestSchedulerProperties:
         program order, so the choice cannot change results."""
         tr = generate_trace(workload("lbm"), 400, seed=7)
         ref = counters(simulate(tr, Policy.MASA, FCFS))
-        for sched in (Scheduler.FRFCFS, Scheduler.FRFCFS_SALP, Scheduler.TCM):
+        for sched in (Scheduler.FRFCFS, Scheduler.FRFCFS_SALP, Scheduler.TCM,
+                      Scheduler.PALP_RP):
             got = counters(simulate(tr, Policy.MASA, SimConfig(scheduler=sched)))
             assert got == ref, sched
 

@@ -143,8 +143,14 @@ class TestPinnedRegression:
         # refresh was delayed); the controller now holds the burst window
         # per bank, costing the trace 108 honest cycles (15401 -> 15509).
         ("dsarp", Policy.MASA): (15509, 270, 204, 1730, 369, 32498, 682711),
-        ("closed", Policy.BASELINE): (29650, 2000, 0, 0, 0, 57731, 0),
-        ("closed", Policy.MASA): (25674, 2000, 0, 0, 0, 50599, 0),
+        # closed-row re-pinned after the internal-PREA timing fix: the
+        # closed-row auto-precharge used to start at max(data_end,
+        # col + tRTP), ignoring tRAS and write recovery; it now waits out
+        # tRAS/tRTP/tWR exactly like an explicit PRE, so back-to-back
+        # same-subarray requests honestly pay the row-cycle time
+        # (docs/commands.md no longer carries the PREA exemption caveat).
+        ("closed", Policy.BASELINE): (34810, 2000, 0, 0, 0, 66952, 0),
+        ("closed", Policy.MASA): (29571, 2000, 0, 0, 0, 57565, 0),
     }
 
     CONFIGS = {

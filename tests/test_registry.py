@@ -1,0 +1,212 @@
+"""The unified spec-resolver + the memtech axis (PR 10 acceptance pins).
+
+Every string-valued config axis — address mapping, workload, refresh
+policy, backend, mesh platform, memtech — resolves through
+``repro.core.dram.registry`` and raises the SAME near-miss ``ValueError``
+shape on a typo. These tests pin that shape per axis so error UX cannot
+drift per-axis again, and cover the new ``DramTiming.preset`` /
+``SimConfig.for_tech`` / ``SimConfig.memtech`` API the resolver backs.
+"""
+import dataclasses
+import re
+
+import pytest
+
+from repro.core.dram import (DDR3_1066, LPDDR4_3200, MEMTECHS, PCM_PALP,
+                             DramTiming, Policy, RefreshPolicy, Scheduler,
+                             SimConfig, generate_trace, mapping_for, registry,
+                             resolve_memtech, simulate, workload,
+                             ROW_SPACE_STRIDE)
+from repro.core.dram.multicore import simulate_multicore
+from repro.experiments.sharding import resolve_mesh
+
+#: (kind, trigger(typo), typo, suggestion, sample of listed valid specs).
+#: One row per axis — the six spec-string surfaces of the config API.
+AXES = [
+    ("address mapping", lambda s: mapping_for(s, 8, 8, 64),
+     "contiguos", "contiguous", ("golden", "xor")),
+    ("workload", workload,
+     "stream_cpy", "stream_copy", ("gups", "mcf", "lbm")),
+    ("refresh policy", RefreshPolicy.from_spec,
+     "dsrp", "dsarp", ("none", "per_bank", "darp", "sarp")),
+    ("backend", lambda s: SimConfig(backend=s),
+     "scann", "scan", ("pallas", "pallas-interpret")),
+    ("mesh platform", resolve_mesh,
+     "cpx:2", "cpu", ("auto", "gpu", "tpu")),
+    ("memtech", resolve_memtech,
+     "lpdr4", "lpddr4", ("ddr3", "pcm_palp")),
+]
+
+
+class TestUniformSpecErrors:
+    """The acceptance criterion: one error shape across all six axes."""
+
+    @pytest.mark.parametrize("kind,trigger,typo,suggestion,listed", AXES,
+                             ids=[a[0].replace(" ", "_") for a in AXES])
+    def test_near_miss_shape(self, kind, trigger, typo, suggestion, listed):
+        with pytest.raises(ValueError) as ei:
+            trigger(typo)
+        msg = str(ei.value)
+        # The uniform prefix, verbatim: unknown <kind> '<spec>'
+        # (did you mean '<suggestion>'?); expected one of [...]
+        bad = typo.split(":")[0]  # the mesh grammar quotes the platform part
+        assert re.match(
+            rf"^unknown {re.escape(kind)} '{re.escape(bad)}' "
+            rf"\(did you mean '{re.escape(suggestion)}'\?\); "
+            rf"expected one of \[", msg), msg
+        for name in listed:
+            assert name in msg
+
+    @pytest.mark.parametrize("kind,trigger,typo,suggestion,listed", AXES,
+                             ids=[a[0].replace(" ", "_") for a in AXES])
+    def test_hopeless_typo_drops_hint_keeps_list(self, kind, trigger, typo,
+                                                 suggestion, listed):
+        hopeless = "qqqqzzzz" + (":2" if ":" in typo else "")
+        with pytest.raises(ValueError) as ei:
+            trigger(hopeless)
+        msg = str(ei.value)
+        assert "did you mean" not in msg
+        assert f"unknown {kind}" in msg
+        for name in listed:
+            assert name in msg
+
+    def test_all_axes_registered(self):
+        assert {"address mapping", "workload", "refresh policy", "backend",
+                "mesh platform", "memtech"} <= set(registry.kinds())
+
+    def test_choices_enumerates_memtechs(self):
+        assert registry.choices("memtech") == ("ddr3", "lpddr4", "pcm_palp")
+
+    def test_unknown_kind_is_an_error(self):
+        with pytest.raises(ValueError, match="unknown spec kind"):
+            registry.choices("flux capacitor")
+
+
+class TestPreset:
+    """DramTiming.preset — the canonical per-technology pack constructor."""
+
+    def test_ddr3_is_bit_identical_to_the_pinned_baseline(self):
+        # The load-bearing pin: the default path of every existing fixture
+        # flows through DDR3_1066; preset() must not drift it.
+        assert DramTiming.preset("ddr3") == DDR3_1066
+        assert DramTiming.preset("DDR3") == DDR3_1066  # case-insensitive
+
+    def test_named_packs(self):
+        assert DramTiming.preset("lpddr4") == LPDDR4_3200
+        assert DramTiming.preset("pcm_palp") == PCM_PALP
+        assert MEMTECHS == {"ddr3": DDR3_1066, "lpddr4": LPDDR4_3200,
+                            "pcm_palp": PCM_PALP}
+
+    @pytest.mark.parametrize("gb,rfc,rfc_pb",
+                             [(8, 160, 64), (16, 280, 112), (32, 475, 190)])
+    def test_ddr3_density_scaling_matches_refresh_bench_table(self, gb, rfc,
+                                                              rfc_pb):
+        t = DramTiming.preset("ddr3", density_gb=gb)
+        assert (t.t_rfc, t.t_rfc_pb) == (rfc, rfc_pb)
+        # density only touches the refresh-burst pair
+        assert dataclasses.replace(t, t_rfc=DDR3_1066.t_rfc,
+                                   t_rfc_pb=DDR3_1066.t_rfc_pb) == DDR3_1066
+
+    def test_lpddr4_density_scaling(self):
+        t = DramTiming.preset("lpddr4", density_gb=16)
+        assert (t.t_rfc, t.t_rfc_pb) == (608, 304)
+
+    def test_t_refi_override(self):
+        assert DramTiming.preset("ddr3", t_refi=2080).t_refi == 2080
+
+    def test_pcm_rejects_refresh_knobs(self):
+        with pytest.raises(ValueError, match="no refresh"):
+            DramTiming.preset("pcm_palp", density_gb=8)
+        with pytest.raises(ValueError, match="no refresh"):
+            DramTiming.preset("pcm_palp", t_refi=2080)
+
+    def test_unknown_density(self):
+        with pytest.raises(ValueError, match="density_gb=12"):
+            DramTiming.preset("ddr3", density_gb=12)
+
+    def test_pcm_pack_has_no_refresh_and_is_write_asymmetric(self):
+        assert PCM_PALP.t_refi == 0 and PCM_PALP.t_rfc == 0
+        assert PCM_PALP.t_wr > 8 * DDR3_1066.t_wr   # the programming pulse
+        assert PCM_PALP.t_rp < DDR3_1066.t_rp       # non-destructive reads
+
+
+class TestSimConfigMemtech:
+    """The sweepable SimConfig.memtech axis + SimConfig.for_tech."""
+
+    def test_default_is_ddr3_with_the_pinned_timing(self):
+        cfg = SimConfig()
+        assert cfg.memtech == "ddr3" and cfg.timing == DDR3_1066
+
+    def test_memtech_binds_its_pack(self):
+        assert SimConfig(memtech="lpddr4").timing == LPDDR4_3200
+        assert SimConfig(memtech="pcm_palp").timing == PCM_PALP
+        assert SimConfig(memtech="PCM_PALP").memtech == "pcm_palp"
+
+    def test_explicit_timing_wins_over_the_pack(self):
+        t = dataclasses.replace(LPDDR4_3200, t_faw=40)
+        assert SimConfig(memtech="lpddr4", timing=t).timing == t
+
+    def test_replace_round_trips(self):
+        cfg = SimConfig(memtech="lpddr4")
+        again = dataclasses.replace(cfg, row_policy="closed")
+        assert again.timing == LPDDR4_3200 and again.memtech == "lpddr4"
+
+    def test_for_tech_builds_preset_timing(self):
+        cfg = SimConfig.for_tech("lpddr4", density_gb=16,
+                                 refresh_policy="per_bank")
+        assert cfg.memtech == "lpddr4"
+        assert (cfg.timing.t_rfc, cfg.timing.t_rfc_pb) == (608, 304)
+        assert cfg.refresh_policy == RefreshPolicy.PER_BANK.spec
+
+    def test_for_tech_rejects_explicit_timing(self):
+        with pytest.raises(ValueError, match="timing"):
+            SimConfig.for_tech("ddr3", timing=DDR3_1066)
+
+    def test_typo_raises_the_registry_error(self):
+        with pytest.raises(ValueError, match="unknown memtech 'lpdr4'"):
+            SimConfig(memtech="lpdr4")
+
+    @pytest.mark.parametrize("kwargs", [dict(refresh=True),
+                                        dict(refresh_policy="all_bank"),
+                                        dict(refresh_policy="darp")])
+    def test_pcm_forces_refresh_none(self, kwargs):
+        with pytest.raises(ValueError,
+                           match="pcm_palp.*forces refresh_policy='none'"):
+            SimConfig(memtech="pcm_palp", **kwargs)
+
+    def test_pcm_without_refresh_is_fine(self):
+        cfg = SimConfig(memtech="pcm_palp", refresh_policy="none")
+        assert cfg.refresh_policy == RefreshPolicy.NONE.spec
+
+    def test_all_memtechs_simulate(self):
+        tr = generate_trace(workload("mcf"), 120, seed=3)
+        for tech in MEMTECHS:
+            res = simulate(tr, Policy.MASA, SimConfig(memtech=tech))
+            assert int(res.n_rd) + int(res.n_wr) == 120, tech
+
+
+class TestPalpReadPriority:
+    """The PALP_RP scheduler rung (the PCM write-asymmetry workaround)."""
+
+    def test_request_key_needs_the_write_bits(self):
+        from repro.core.dram.schedulers import request_key
+        with pytest.raises(ValueError, match="hwr"):
+            request_key(Scheduler.PALP_RP, {}, 0, 0, 0, 0, 0, 2, True)
+
+    def test_palp_rp_improves_read_latency_on_pcm(self):
+        """PALP's premise (Sec. 5): on a PCM device, steering pending reads
+        away from write-busy partitions cuts MEAN READ LATENCY vs plain
+        FR-FCFS (total cycles may not move — the write drain tail is not
+        what cores wait on). Needs >= 4 cores so the scheduler has real
+        choice."""
+        mix = [generate_trace(workload(m), 300, seed=7,
+                              row_space_offset=ROW_SPACE_STRIDE * i)
+               for i, m in enumerate(("mcf", "lbm", "stream_copy", "milc"))]
+
+        def read_lat(sched):
+            r = simulate_multicore(
+                mix, Policy.MASA,
+                SimConfig(memtech="pcm_palp", scheduler=sched)).shared
+            return int(r.sum_latency) / int(r.n_reads)
+
+        assert read_lat(Scheduler.PALP_RP) < read_lat(Scheduler.FRFCFS)

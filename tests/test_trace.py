@@ -20,8 +20,10 @@ class TestWorkloadLookup:
     def test_known_name(self):
         assert workload("mcf").name == "mcf"
 
-    def test_typo_raises_keyerror_with_near_miss_and_valid_names(self):
-        with pytest.raises(KeyError) as ei:
+    def test_typo_raises_valueerror_with_near_miss_and_valid_names(self):
+        # ValueError (not KeyError) since the registry unification: every
+        # spec axis raises the same error shape (see test_registry.py).
+        with pytest.raises(ValueError) as ei:
             workload("stream_cpy")
         msg = str(ei.value)
         assert "stream_cpy" in msg
@@ -30,7 +32,7 @@ class TestWorkloadLookup:
             assert name in msg
 
     def test_hopeless_typo_still_lists_valid_names(self):
-        with pytest.raises(KeyError) as ei:
+        with pytest.raises(ValueError) as ei:
             workload("zzzzzz")
         assert "gups" in str(ei.value)
         assert "did you mean" not in str(ei.value)
